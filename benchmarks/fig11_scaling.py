@@ -1,0 +1,35 @@
+"""Figure 11: dataset-size scaling — the ACORN advantage grows with n
+(graph search is sublinear; pre-filtering is linear in s*n)."""
+import jax
+
+from repro.core import build_acorn_gamma, build_hnsw
+from repro.data import make_hcps_dataset, make_workload
+from .common import B, D, K, run_acorn, run_postfilter, run_prefilter, \
+    write_csv
+
+M, GAMMA, MBETA = 16, 16, 32
+SIZES = (4096, 12288, 24576)
+
+
+def run(quick: bool = False):
+    sizes = SIZES[:2] if quick else SIZES
+    rows, ratios = [], []
+    for n in sizes:
+        ds = make_hcps_dataset(n=n, d=D, seed=0)
+        wl = make_workload(ds, kind="contains", correlation="none",
+                           n_queries=B, k=K, seed=1)
+        key = jax.random.PRNGKey(0)
+        g = build_acorn_gamma(ds.x, key, M=M, gamma=GAMMA, m_beta=MBETA)
+        a = run_acorn(g, ds.x, wl, ds, 128, "acorn-gamma", M, MBETA)
+        pre = run_prefilter(ds.x, wl, ds)
+        rows.append([n, "acorn-gamma", f"{a['recall']:.4f}",
+                     f"{a['qps']:.1f}", f"{a['dist_comps']:.0f}"])
+        rows.append([n, "prefilter", f"{pre['recall']:.4f}",
+                     f"{pre['qps']:.1f}", f"{pre['dist_comps']:.0f}"])
+        ratios.append(a["dist_comps"] / max(pre["dist_comps"], 1.0))
+    write_csv("fig11_scaling.csv",
+              ["n", "method", "recall", "qps", "dist_comps"], rows)
+    # sublinearity: acorn's dist-comp share of the corpus shrinks with n
+    checks = {"acorn_share_shrinks_with_n":
+              all(ratios[i + 1] < ratios[i] for i in range(len(ratios) - 1))}
+    return rows, checks

@@ -1,0 +1,58 @@
+"""Figure 8: Recall@10 vs QPS on HCPS datasets (TripClick/LAION-style):
+contains-any keyword predicates and date-range predicates — workloads the
+specialized indices (FilteredDiskANN/NHQ) cannot serve at all."""
+import jax
+
+from repro.core import build_acorn_1, build_acorn_gamma, build_hnsw
+from repro.data import make_hcps_dataset, make_workload
+from .common import (B, D, EF_SWEEP, K, N, qps_at_recall, run_acorn,
+                     run_postfilter, run_prefilter, write_csv)
+
+M, GAMMA, MBETA = 16, 16, 32
+
+
+def run(quick: bool = False):
+    n = N // 4 if quick else N
+    efs = EF_SWEEP[:3] if quick else EF_SWEEP
+    ds = make_hcps_dataset(n=n, d=D, seed=0)
+    key = jax.random.PRNGKey(0)
+    g_gamma = build_acorn_gamma(ds.x, key, M=M, gamma=GAMMA, m_beta=MBETA)
+    M1 = 32  # paper's ACORN-1 parameter (2-hop reach needs 2M=64-wide lists)
+    g_one = build_acorn_1(ds.x, key, M=M1)
+    g_hnsw = build_hnsw(ds.x, key, M=M)
+
+    rows, checks = [], {}
+    for wl_kind in ["contains", "between"]:
+        wl = make_workload(ds, kind=wl_kind, n_queries=B, k=K, seed=1)
+        curves = {}
+        for name, fn in [
+            ("acorn-gamma", lambda ef: run_acorn(g_gamma, ds.x, wl, ds, ef,
+                                                 "acorn-gamma", M, MBETA)),
+            ("acorn-1", lambda ef: run_acorn(g_one, ds.x, wl, ds, ef,
+                                             "acorn-1", M1, M1)),
+            ("postfilter", lambda ef: run_postfilter(g_hnsw, ds.x, wl, ds,
+                                                     ef, M)),
+        ]:
+            pts = []
+            for ef in efs:
+                r = fn(ef)
+                pts.append(r)
+                rows.append([wl_kind, name, ef, f"{r['recall']:.4f}",
+                             f"{r['qps']:.1f}"])
+            curves[name] = pts
+        pre = run_prefilter(ds.x, wl, ds)
+        rows.append([wl_kind, "prefilter", "-", f"{pre['recall']:.4f}",
+                     f"{pre['qps']:.1f}"])
+        curves["prefilter"] = [pre]
+        g09 = qps_at_recall(curves["acorn-gamma"], 0.9)
+        checks[f"{wl_kind}:acorn_gamma_reaches_0.9"] = g09 is not None
+        # CPU wall-QPS favors the single-BLAS-call brute force at these n;
+        # the paper's complexity claim (§3.2) is validated on distance
+        # computations, which scale exactly as on the paper's hardware
+        ok_pts = [pt for pt in curves["acorn-gamma"] if pt["recall"] >= 0.85]
+        if ok_pts:
+            checks[f"{wl_kind}:acorn_fewer_dist_comps_than_prefilter"] = \
+                min(pt["dist_comps"] for pt in ok_pts) < pre["dist_comps"]
+    write_csv("fig8_hcps.csv", ["workload", "method", "ef", "recall", "qps"],
+              rows)
+    return rows, checks

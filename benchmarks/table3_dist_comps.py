@@ -1,0 +1,67 @@
+"""Table 3: # distance computations to reach recall@10 = 0.8.
+
+Paper ordering: oracle < ACORN-γ < ACORN-1 < HNSW post-filter."""
+import jax
+import numpy as np
+
+from repro.core import (OraclePartitionIndex, build_acorn_1,
+                        build_acorn_gamma, build_hnsw)
+from repro.data import make_lcps_dataset, make_workload
+from .common import (B, D, EF_SWEEP, K, N, run_acorn, run_oracle,
+                     run_postfilter, write_csv)
+
+M, GAMMA, MBETA = 16, 12, 32
+CARD = 12
+TARGET = 0.8
+
+
+def _dc_at_recall(points):
+    for p in points:                      # sweep is ordered by ef
+        if p["recall"] >= TARGET:
+            return p["dist_comps"]
+    return None
+
+
+def run(quick: bool = False):
+    n = N // 4 if quick else N
+    efs = EF_SWEEP[:3] if quick else EF_SWEEP
+    ds = make_lcps_dataset(n=n, d=D, card=CARD, seed=0)
+    wl = make_workload(ds, kind="equals", n_queries=B, k=K, seed=1,
+                       card=CARD)
+    key = jax.random.PRNGKey(0)
+    g_gamma = build_acorn_gamma(ds.x, key, M=M, gamma=GAMMA, m_beta=MBETA)
+    M1 = 32  # paper's ACORN-1 parameter (2-hop reach needs 2M=64-wide lists)
+    g_one = build_acorn_1(ds.x, key, M=M1)
+    g_hnsw = build_hnsw(ds.x, key, M=M)
+    labels = np.asarray(ds.table.int_cols["label"])
+    oidx = OraclePartitionIndex.build(ds.x, {v: labels == v
+                                             for v in range(CARD)}, key, M=M)
+
+    res = {}
+    res["oracle"] = _dc_at_recall([run_oracle(oidx, wl, ds, ef)
+                                   for ef in efs])
+    res["acorn-gamma"] = _dc_at_recall(
+        [run_acorn(g_gamma, ds.x, wl, ds, ef, "acorn-gamma", M, MBETA)
+         for ef in efs])
+    res["acorn-1"] = _dc_at_recall(
+        [run_acorn(g_one, ds.x, wl, ds, ef, "acorn-1", M1, M1) for ef in efs])
+    res["postfilter"] = _dc_at_recall(
+        [run_postfilter(g_hnsw, ds.x, wl, ds, ef, M) for ef in efs])
+
+    base = res.get("oracle")
+    rows = []
+    for k, v in res.items():
+        pct = "" if (v is None or not base) else \
+            f"+{100 * (v - base) / base:.1f}%"
+        rows.append([k, "-" if v is None else f"{v:.1f}", pct])
+    write_csv("table3_dist_comps.csv",
+              ["method", f"dist_comps@recall{TARGET}", "vs_oracle"], rows)
+
+    ok = all(v is not None for v in res.values())
+    checks = {"all_methods_reach_0.8": ok}
+    if ok:
+        checks["ordering_oracle<=gamma<=one"] = (
+            res["oracle"] <= res["acorn-gamma"] <= res["acorn-1"] * 1.1)
+        checks["postfilter_worst"] = (
+            res["postfilter"] >= res["acorn-gamma"])
+    return rows, checks

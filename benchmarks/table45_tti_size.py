@@ -1,0 +1,62 @@
+"""Tables 4 + 5: time-to-index and index size.
+
+TTI uses the paper-faithful *incremental* builder (its cost structure scales
+with γ — §6.2); sizes come from the stored graph arrays + vectors.
+Paper bands: TTI(ACORN-1) < TTI(HNSW) < TTI(ACORN-γ);
+size(ACORN-γ) within ~1.3-2x of HNSW; ACORN-1 ~ HNSW.
+"""
+import time
+
+import jax
+
+from repro.core import build_acorn_1, build_acorn_gamma, build_hnsw
+from repro.core.build_incremental import build_incremental
+from repro.core.graph import memory_bytes
+from repro.data import make_lcps_dataset
+from .common import D, write_csv
+
+M, GAMMA, MBETA = 8, 6, 16
+N_TTI = 1200  # sequential inserts on one core — kept small
+
+
+def run(quick: bool = False):
+    n = 600 if quick else N_TTI
+    ds = make_lcps_dataset(n=n, d=16, card=12, seed=0)
+    key = jax.random.PRNGKey(0)
+
+    tti, size = {}, {}
+    for variant, kw in [("hnsw", dict(efc=24)),
+                        ("acorn-1", dict()),
+                        ("acorn-gamma", dict(gamma=GAMMA))]:
+        # warmup build amortizes jit compilation out of the measurement
+        build_incremental(ds.x[: n // 4], key, M=M, variant=variant, **kw)
+        g, secs = build_incremental(ds.x, key, M=M, variant=variant, **kw)
+        tti[variant] = secs
+        size[variant] = memory_bytes(g)
+
+    vec_bytes = ds.x.size * 4
+    # bulk-builder sizes at the same parameters (the serving-scale builder)
+    gb = build_acorn_gamma(ds.x, key, M=M, gamma=GAMMA, m_beta=MBETA)
+    g1 = build_acorn_1(ds.x, key, M=M)
+    gh = build_hnsw(ds.x, key, M=M)
+    bulk_size = {"acorn-gamma": memory_bytes(gb),
+                 "acorn-1": memory_bytes(g1), "hnsw": memory_bytes(gh)}
+
+    rows = []
+    for v in ["hnsw", "acorn-1", "acorn-gamma"]:
+        rows.append([v, f"{tti[v]:.2f}",
+                     f"{(size[v] + vec_bytes) / 1e6:.2f}",
+                     f"{(bulk_size[v] + vec_bytes) / 1e6:.2f}"])
+    write_csv("table45_tti_size.csv",
+              ["variant", "tti_s_incremental", "size_MB_incremental",
+               "size_MB_bulk"], rows)
+
+    checks = {
+        "tti_acorn1_lowest": tti["acorn-1"] <= tti["hnsw"] * 1.2,
+        "tti_gamma_highest": tti["acorn-gamma"] > tti["hnsw"],
+        "tti_gamma_scales_with_gamma":
+            tti["acorn-gamma"] / max(tti["acorn-1"], 1e-9) > 2.0,
+        "size_gamma_bounded": (bulk_size["acorn-gamma"] + vec_bytes)
+            <= 2.5 * (bulk_size["hnsw"] + vec_bytes),
+    }
+    return rows, checks

@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing.
+
+Design for 1000+ nodes (DESIGN.md §5):
+  * checkpoints store *logical* (unsharded) arrays + a JSON manifest — a
+    restore may target a different mesh (elastic re-sharding happens at
+    load via jax.device_put with the new sharding);
+  * writes are atomic: tmp directory + os.replace, manifest written last,
+    so a node failure mid-save never corrupts the latest checkpoint;
+  * optional async save thread keeps the training loop running during I/O;
+  * retention keeps the newest K checkpoints.
+
+On a real cluster each host writes its owned shards (ocdbt-style); this
+single-host implementation centralizes the write but preserves the
+atomicity + manifest + elastic-restore contract the loop depends on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        if self.async_save:
+            host_tree = jax.tree_util.tree_map(np.asarray, tree)
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extra or {}))
+            self._thread.start()
+        else:
+            host_tree = jax.tree_util.tree_map(np.asarray, tree)
+            self._write(step, host_tree, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, extra: Dict):
+        flat, _ = _flatten(host_tree)
+        tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: np.asarray(v) for k, v in flat.items()})
+        manifest = {
+            "step": step, "time": time.time(), "extra": extra,
+            "keys": sorted(flat.keys()),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``template``; if ``shardings``
+        (a matching pytree of Shardings) is given, arrays are placed
+        sharded — this is the elastic path: the stored logical arrays can
+        re-shard onto any mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            flat_t, treedef = _flatten(template)
+            leaves = []
+            for key in flat_t:
+                if key not in data:
+                    raise KeyError(f"checkpoint missing {key}")
+                leaves.append(data[key])
+        restored = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+        if shardings is not None:
+            restored = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), restored, shardings)
+        return restored, step
+
+    def manifest(self, step: int) -> Dict:
+        with open(os.path.join(self.dir, f"step_{step:08d}",
+                               "manifest.json")) as f:
+            return json.load(f)

@@ -1,0 +1,28 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+ACORN serving system), each exposing an ``ARCH`` object with the uniform
+interface consumed by launch/dryrun.py, the smoke tests and benchmarks.
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "smollm-360m": "repro.configs.smollm_360m",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "pna": "repro.configs.pna",
+    "dien": "repro.configs.dien",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "sasrec": "repro.configs.sasrec",
+    "dcn-v2": "repro.configs.dcn_v2",
+    "acorn": "repro.configs.acorn",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "acorn"]
+
+
+def get_arch(name: str):
+    mod = importlib.import_module(_MODULES[name])
+    return mod.ARCH

@@ -1,0 +1,138 @@
+"""ACORN itself as a servable system config (the paper's contribution).
+
+Two distributed serving cells, both on the corpus-sharded layout
+(DESIGN.md §5: corpus rows shard over every mesh axis; queries replicate
+along 'model', batch-shard along the DP axes; per-shard results merge with
+a k-row all-gather):
+
+  serve_1m   B=512 queries, n=2^20,   d=512 (LAION-1M scale)
+  serve_25m  B=512 queries, n=3*2^23, d=512 (LAION-25M scale — Figure 11)
+
+The step is the pre-filter/brute-force path (the fallback every query can
+take and the retrieval_cand hot loop); the graph-traversal path runs on
+host-scale meshes in examples/ + benchmarks (its while-loop lowers per
+shard, exercised by tests/test_distributed.py on a small mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .lm_common import CellDef
+
+ACORN_SHAPES: Dict[str, Dict] = {
+    "serve_1m": dict(kind="serve", batch=512, n=1 << 20, d=512, k=10),
+    "serve_25m": dict(kind="serve", batch=512, n=3 << 23, d=512, k=10),
+}
+
+REDUCED_ACORN_SHAPES: Dict[str, Dict] = {
+    "serve_1m": dict(kind="serve", batch=8, n=2048, d=32, k=10),
+    "serve_25m": dict(kind="serve", batch=8, n=4096, d=32, k=10),
+}
+
+
+class AcornServeArch:
+    family = "acorn"
+    name = "acorn"
+
+    def config(self, reduced: bool = False, shape: str | None = None):
+        return None
+
+    def cells(self):
+        return [CellDef(s, "serve") for s in ACORN_SHAPES]
+
+    def step_fn(self, cfg, shape: str, reduced: bool = False,
+                mesh: Mesh | None = None, k: int = 10,
+                optimized: bool = False, chunk: int = 8192):
+        """optimized=False: paper-faithful baseline — materialize the full
+        per-shard score matrix, mask it, top-k (the FAISS flat-scan
+        pre-filter structure).
+
+        optimized=True (§Perf, beyond-paper): scan the local corpus in
+        chunks with a running top-k so per-chip HBM traffic is ~one read of
+        corpus + masks instead of 3-4 passes over a materialized
+        (B, n_local) f32 score matrix; composes with a bf16 corpus for
+        another ~2x (ranking is bf16-stable; tests/test_perf_variants.py)."""
+        assert mesh is not None, "acorn serve step is mesh-explicit"
+        axes = tuple(mesh.axis_names)
+
+        def merge_global(qn, top_s, top_i, base_l):
+            ids = base_l[0] + top_i
+            s = top_s
+            for ax in axes:
+                s = jax.lax.all_gather(s, ax, axis=1, tiled=True)
+                ids = jax.lax.all_gather(ids, ax, axis=1, tiled=True)
+            s2, pos = jax.lax.top_k(s, min(k, s.shape[1]))
+            d2 = qn - s2
+            ids2 = jnp.take_along_axis(ids, pos, axis=1)
+            return jnp.where(jnp.isfinite(s2), ids2, -1), d2
+
+        def local_base(x_l, q, m_l, base_l):
+            qn = jnp.sum(q * q, axis=1, keepdims=True)
+            xn = jnp.sum(x_l * x_l, axis=1)
+            s = 2.0 * q @ x_l.T - xn[None, :]              # rank-equal -d2
+            s = jnp.where(m_l, s, -jnp.inf)
+            top_s, top_i = jax.lax.top_k(s, k)
+            return merge_global(qn, top_s, top_i, base_l)
+
+        def local_opt(x_l, q, m_l, base_l):
+            b = q.shape[0]
+            n_l = x_l.shape[0]
+            nc = max(n_l // chunk, 1)
+            cs = n_l // nc
+            qn = jnp.sum(q * q, axis=1, keepdims=True)
+            qf = q.astype(x_l.dtype)
+
+            def body(carry, i):
+                bs, bi = carry
+                xb = jax.lax.dynamic_slice_in_dim(x_l, i * cs, cs, 0)
+                mb = jax.lax.dynamic_slice_in_dim(m_l, i * cs, cs, 1)
+                xn = jnp.sum(xb.astype(jnp.float32) ** 2, axis=1)
+                s = 2.0 * (qf @ xb.T).astype(jnp.float32) - xn[None, :]
+                s = jnp.where(mb, s, -jnp.inf)
+                # chunk-local top-k FIRST: the (B, 2k) merge never touches
+                # the big score tile again (v1 concatenated the full tile
+                # with the running top-k — an extra HBM pass; refuted in
+                # §Perf iteration 1)
+                ts_c, tp_c = jax.lax.top_k(s, k)
+                ids_c = i * cs + tp_c
+                ms = jnp.concatenate([bs, ts_c], axis=1)
+                mi = jnp.concatenate([bi, ids_c], axis=1)
+                ts, tp = jax.lax.top_k(ms, k)
+                return (ts, jnp.take_along_axis(mi, tp, axis=1)), None
+
+            init = (jnp.full((b, k), -jnp.inf, jnp.float32),
+                    jnp.full((b, k), -1, jnp.int32))
+            (top_s, top_i), _ = jax.lax.scan(body, init, jnp.arange(nc))
+            return merge_global(qn, top_s, top_i, base_l)
+
+        local = local_opt if optimized else local_base
+
+        def serve(x, queries, masks):
+            """x (n,d) corpus; queries (B,d); masks (B,n) -> (ids, dists)."""
+            n = x.shape[0]
+            base = jnp.arange(0, n, dtype=jnp.int32)
+            return jax.shard_map(
+                local, mesh=mesh,
+                in_specs=(P(axes, None), P(), P(None, axes), P(axes)),
+                out_specs=(P(), P()), check_vma=False,
+            )(x, queries, masks, base)
+
+        return serve
+
+    def abstract_inputs(self, cfg, shape: str, reduced: bool = False):
+        spec = (REDUCED_ACORN_SHAPES if reduced else ACORN_SHAPES)[shape]
+        S = jax.ShapeDtypeStruct
+        return (S((spec["n"], spec["d"]), jnp.float32),
+                S((spec["batch"], spec["d"]), jnp.float32),
+                S((spec["batch"], spec["n"]), jnp.bool_))
+
+    def in_shardings(self, cfg, shape: str, mesh: Mesh):
+        axes = tuple(mesh.axis_names)
+        return (P(axes, None), P(), P(None, axes))
+
+
+ARCH = AcornServeArch()

@@ -1,0 +1,125 @@
+"""dcn-v2 [recsys] n_dense=13 n_sparse=26 embed_dim=16 n_cross_layers=3
+mlp=1024-1024-512 interaction=cross [arXiv:2008.13535].
+
+Criteo-style vocabularies: 20 features at 2^20 rows, 6 at 2^23 (hashed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.recsys import DCNv2Config, dcnv2_forward, dcnv2_loss, \
+    init_dcnv2
+from repro.train.optimizer import init_adamw
+from .recsys_common import (RECSYS_SHAPES, REDUCED_RECSYS_SHAPES,
+                            RecsysArchBase, dp_of, all_axes,
+                            recsys_param_spec_tree)
+
+FULL = DCNv2Config(
+    vocab_sizes=tuple([1 << 20] * 20 + [1 << 23] * 6))
+REDUCED = DCNv2Config(
+    n_dense=4, n_sparse=5, vocab_sizes=(64, 64, 128, 128, 256),
+    embed_dim=8, n_cross=2, mlp_dims=(32, 16))
+
+
+class DCNv2Arch(RecsysArchBase):
+    name = "dcn-v2"
+
+    def config(self, reduced: bool = False, shape: str | None = None):
+        return REDUCED if reduced else FULL
+
+    def init(self, cfg, key):
+        return init_dcnv2(cfg, key)
+
+    def step_fn(self, cfg: DCNv2Config, shape: str, reduced: bool = False,
+                optimized: bool = False):
+        kind = RECSYS_SHAPES[shape]["kind"]
+        if kind == "train":
+            return self.make_train(functools.partial(dcnv2_loss, cfg))
+        if kind == "serve":
+            return lambda params, batch: dcnv2_forward(cfg, params, batch)
+
+        def retrieve(params, batch, cand_sparse):
+            # one user context scored against N candidate item-feature rows:
+            # broadcast the user's dense + sparse features, swap in the
+            # candidate's item-side features (first sparse column here).
+            # Baseline: the broadcast sparse matrix makes XLA all-gather
+            # every embedding table (the ids are batch-sharded while tables
+            # are row-sharded) — 20+ table all-gathers per step.
+            n = cand_sparse.shape[0]
+            dense = jnp.broadcast_to(batch["dense"], (n,
+                                                      batch["dense"].shape[1]))
+            sparse = jnp.broadcast_to(batch["sparse"],
+                                      (n, batch["sparse"].shape[1]))
+            sparse = sparse.at[:, 0].set(cand_sparse)
+            return dcnv2_forward(cfg, params,
+                                 {"dense": dense, "sparse": sparse})
+
+        def retrieve_opt(params, batch, cand_sparse):
+            """§Perf (beyond-paper): the user's 25 non-item features are
+            constant across candidates — look them up ONCE at batch=1 and
+            broadcast the 16-dim *embeddings* instead of the ids, so only
+            the candidate column's table is touched per-candidate."""
+            n = cand_sparse.shape[0]
+            user_embs = [jnp.take(params["tables"][i],
+                                  jnp.clip(batch["sparse"][:, i], 0), axis=0)
+                         for i in range(1, cfg.n_sparse)]   # each (1, E)
+            e0 = jnp.take(params["tables"][0], jnp.clip(cand_sparse, 0),
+                          axis=0)                            # (N, E)
+            dense = jnp.broadcast_to(batch["dense"],
+                                     (n, batch["dense"].shape[1]))
+            user_cat = jnp.concatenate(user_embs, axis=-1)   # (1, 25E)
+            x0 = jnp.concatenate(
+                [dense, e0, jnp.broadcast_to(user_cat, (n,
+                                                        user_cat.shape[1]))],
+                axis=-1)
+            x = x0
+            for cp in params["cross"]:
+                x = x0 * (x @ cp["w"] + cp["b"]) + x
+            from repro.models.recsys import _mlp
+            deep = _mlp(params["mlp"], x0, final_act=True)
+            z = jnp.concatenate([x, deep], axis=-1)
+            return (z @ params["head"])[:, 0]
+
+        return retrieve_opt if optimized else retrieve
+
+    def _batch_struct(self, cfg, b):
+        S = jax.ShapeDtypeStruct
+        return {"dense": S((b, cfg.n_dense), jnp.float32),
+                "sparse": S((b, cfg.n_sparse), jnp.int32),
+                "label": S((b,), jnp.float32)}
+
+    def abstract_inputs(self, cfg, shape: str, reduced: bool = False):
+        spec = (REDUCED_RECSYS_SHAPES if reduced else RECSYS_SHAPES)[shape]
+        params = self.abstract_params(cfg)
+        b = spec["batch"]
+        batch = self._batch_struct(cfg, b)
+        if spec["kind"] == "train":
+            return (params, jax.eval_shape(init_adamw, params), batch)
+        if spec["kind"] == "serve":
+            batch.pop("label")
+            return (params, batch)
+        batch = self._batch_struct(cfg, 1)
+        batch.pop("label")
+        return (params, batch,
+                jax.ShapeDtypeStruct((spec["n_candidates"],), jnp.int32))
+
+    def in_shardings(self, cfg, shape: str, mesh: Mesh):
+        spec = RECSYS_SHAPES[shape]
+        dp = dp_of(mesh)
+        pspec = recsys_param_spec_tree(self.abstract_params(cfg), mesh)
+        bs = {"dense": P(dp, None), "sparse": P(dp, None),
+              "label": P(dp)}
+        if spec["kind"] == "train":
+            return (pspec, self.opt_specs(pspec), bs)
+        if spec["kind"] == "serve":
+            bs.pop("label")
+            return (pspec, bs)
+        rep = {"dense": P(None, None), "sparse": P(None, None)}
+        return (pspec, rep, P(all_axes(mesh)))
+
+
+ARCH = DCNv2Arch()

@@ -1,0 +1,149 @@
+"""dien [recsys] embed_dim=18 seq_len=100 gru_dim=108 mlp=200-80
+interaction=augru [arXiv:1809.03672].
+
+retrieval_cand scores 10^6 candidates for one user: the interest-extractor
+GRU runs once; attention + AUGRU re-run per candidate in device-sharded
+chunks (AUGRU is target-conditioned — that cost is intrinsic to DIEN and is
+why retrieval systems pair it with a two-tower candidate generator; see
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.recsys import (DIENConfig, _gru_cell, dien_forward,
+                                 dien_loss, init_dien)
+from repro.train.optimizer import init_adamw
+from .recsys_common import (RECSYS_SHAPES, REDUCED_RECSYS_SHAPES,
+                            RecsysArchBase, dp_of, all_axes,
+                            recsys_param_spec_tree)
+
+FULL = DIENConfig(n_items=1_048_576, n_cates=16_384)
+REDUCED = DIENConfig(n_items=512, n_cates=64, embed_dim=8, seq_len=12,
+                     gru_dim=16, mlp_dims=(16, 8))
+
+
+def dien_score_candidates(cfg: DIENConfig, params, batch, cand_items,
+                          cand_cates, chunk: int = 4096):
+    """One user (batch fields have B=1) against (N,) candidates."""
+    hi = params["item_emb"][jnp.clip(batch["hist_items"], 0)]
+    hc = params["cate_emb"][jnp.clip(batch["hist_cates"], 0)]
+    h_seq = jnp.concatenate([hi, hc], axis=-1)              # (1,S,2E)
+    mask = batch["mask"].astype(h_seq.dtype)
+
+    h0 = jnp.zeros((1, cfg.gru_dim), h_seq.dtype)
+
+    def step1(h, xs):
+        x, m = xs
+        h2 = _gru_cell(params["gru1"], h, x)
+        return jnp.where(m[:, None] > 0, h2, h), jnp.where(
+            m[:, None] > 0, h2, h)
+
+    _, interests = jax.lax.scan(step1, h0, (h_seq.swapaxes(0, 1),
+                                            mask.swapaxes(0, 1)))
+    interests = interests[:, 0]                             # (S,G)
+
+    n = cand_items.shape[0]
+    nc = n // chunk if n % chunk == 0 and n > chunk else 1
+    ci = cand_items.reshape(nc, -1)
+    cc = cand_cates.reshape(nc, -1)
+
+    def score_chunk(xs):
+        items, cates = xs                                   # (C,)
+        ti = params["item_emb"][items]
+        tc = params["cate_emb"][cates]
+        tgt = jnp.concatenate([ti, tc], axis=-1)            # (C,2E)
+        att_logits = jnp.einsum("sg,ge,ce->cs", interests,
+                                params["att_w"], tgt)
+        att_logits = jnp.where(mask[0][None, :] > 0, att_logits, -1e30)
+        att = jax.nn.softmax(att_logits, axis=-1)           # (C,S)
+        c = items.shape[0]
+        h0c = jnp.zeros((c, cfg.gru_dim), tgt.dtype)
+
+        def step2(h, xs2):
+            x, a, m = xs2
+            h2 = _gru_cell(params["augru"], h,
+                           jnp.broadcast_to(x[None], (c, x.shape[0])), a)
+            return jnp.where(m[:, None] > 0, h2, h), None
+
+        h_final, _ = jax.lax.scan(
+            step2, h0c, (interests, att.T, jnp.broadcast_to(
+                mask[0][:, None], (mask.shape[1], c))))
+        hist_sum = (h_seq[0] * mask[0][:, None]).sum(0)     # (2E,)
+        hs = jnp.broadcast_to(hist_sum[None], tgt.shape)
+        z = jnp.concatenate([h_final, tgt, hs, tgt * hs], axis=-1)
+        from repro.models.recsys import _mlp
+        return _mlp(params["mlp"], z)[:, 0]                 # (C,)
+
+    scores = jax.lax.map(score_chunk, (ci, cc))
+    return scores.reshape(-1)
+
+
+class DIENArch(RecsysArchBase):
+    name = "dien"
+
+    def config(self, reduced: bool = False, shape: str | None = None):
+        return REDUCED if reduced else FULL
+
+    def init(self, cfg, key):
+        return init_dien(cfg, key)
+
+    def step_fn(self, cfg: DIENConfig, shape: str, reduced: bool = False):
+        kind = RECSYS_SHAPES[shape]["kind"]
+        if kind == "train":
+            return self.make_train(functools.partial(dien_loss, cfg))
+        if kind == "serve":
+            return lambda params, batch: dien_forward(cfg, params, batch)
+
+        def retrieve(params, batch, cand_items, cand_cates):
+            return dien_score_candidates(cfg, params, batch, cand_items,
+                                         cand_cates,
+                                         chunk=4096 if not reduced else 64)
+        return retrieve
+
+    def _batch_struct(self, cfg, b):
+        S = jax.ShapeDtypeStruct
+        return {
+            "hist_items": S((b, cfg.seq_len), jnp.int32),
+            "hist_cates": S((b, cfg.seq_len), jnp.int32),
+            "mask": S((b, cfg.seq_len), jnp.float32),
+            "target_item": S((b,), jnp.int32),
+            "target_cate": S((b,), jnp.int32),
+            "label": S((b,), jnp.float32),
+        }
+
+    def abstract_inputs(self, cfg, shape: str, reduced: bool = False):
+        spec = (REDUCED_RECSYS_SHAPES if reduced else RECSYS_SHAPES)[shape]
+        params = self.abstract_params(cfg)
+        b = spec["batch"]
+        batch = self._batch_struct(cfg, b)
+        if spec["kind"] == "train":
+            return (params, jax.eval_shape(init_adamw, params), batch)
+        if spec["kind"] == "serve":
+            return (params, batch)
+        n = spec["n_candidates"]
+        S = jax.ShapeDtypeStruct
+        return (params, batch, S((n,), jnp.int32), S((n,), jnp.int32))
+
+    def in_shardings(self, cfg, shape: str, mesh: Mesh):
+        spec = RECSYS_SHAPES[shape]
+        dp = dp_of(mesh)
+        pspec = recsys_param_spec_tree(self.abstract_params(cfg), mesh)
+        bs = {"hist_items": P(dp, None), "hist_cates": P(dp, None),
+              "mask": P(dp, None), "target_item": P(dp),
+              "target_cate": P(dp), "label": P(dp)}
+        if spec["kind"] == "train":
+            return (pspec, self.opt_specs(pspec), bs)
+        if spec["kind"] == "serve":
+            return (pspec, bs)
+        rep = {"hist_items": P(None, None), "hist_cates": P(None, None),
+               "mask": P(None, None), "target_item": P(None),
+               "target_cate": P(None), "label": P(None)}
+        return (pspec, rep, P(all_axes(mesh)), P(all_axes(mesh)))
+
+
+ARCH = DIENArch()

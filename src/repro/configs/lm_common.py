@@ -1,0 +1,190 @@
+"""Shared machinery for the LM-family architectures.
+
+Each LM arch supports the assigned shapes:
+  train_4k     seq 4096,   global_batch 256   (train_step)
+  prefill_32k  seq 32768,  global_batch 32    (serve: prefill)
+  decode_32k   cache 32768, global_batch 128  (serve: one-token decode)
+  long_500k    cache 524288, global_batch 1   (decode; sub-quadratic archs
+                                               only — full-attention archs
+                                               skip per assignment rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import tree_param_specs, lm_param_spec
+from repro.models.transformer import (TransformerConfig, decode_step, forward,
+                                      init_cache, init_lm, lm_loss, prefill)
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+LM_SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+REDUCED_SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq=32, batch=4),
+    "prefill_32k": dict(kind="prefill", seq=32, batch=2),
+    "decode_32k": dict(kind="decode", seq=32, batch=4),
+    "long_500k": dict(kind="decode", seq=64, batch=1),
+}
+
+
+@dataclasses.dataclass
+class CellDef:
+    shape: str
+    kind: str
+    skip: Optional[str] = None
+
+
+class LMArch:
+    family = "lm"
+
+    def __init__(self, name: str, full: TransformerConfig,
+                 reduced: TransformerConfig,
+                 long_ctx_skip: Optional[str] = None,
+                 kv_shardable: bool = True):
+        self.name = name
+        self._full = full
+        self._reduced = reduced
+        self._long_skip = long_ctx_skip
+        self._kv_shardable = kv_shardable
+        self.opt = AdamWConfig()
+
+    # ------------------------------------------------------------------
+    def config(self, reduced: bool = False,
+               shape: Optional[str] = None) -> TransformerConfig:
+        del shape  # LM configs are shape-independent
+        return self._reduced if reduced else self._full
+
+    def cells(self):
+        out = []
+        for shape, spec in LM_SHAPES.items():
+            skip = self._long_skip if shape == "long_500k" else None
+            out.append(CellDef(shape, spec["kind"], skip))
+        return out
+
+    def init(self, cfg, key):
+        return init_lm(cfg, key)
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(
+            lambda: init_lm(cfg, jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    def step_fn(self, cfg: TransformerConfig, shape: str) -> Callable:
+        kind = LM_SHAPES[shape]["kind"]
+        seq = LM_SHAPES[shape]["seq"]
+        opt = self.opt
+        if kind == "train":
+            def train(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: lm_loss(cfg, p, batch["tokens"],
+                                      batch["labels"]))(params)
+                params, opt_state = adamw_update(opt, grads, opt_state,
+                                                 params)
+                return params, opt_state, loss
+            return train
+        if kind == "prefill":
+            def pre(params, batch):
+                return prefill(cfg, params, batch["tokens"],
+                               max_seq=batch["tokens"].shape[1])
+            return pre
+
+        def dec(params, cache, batch):
+            return decode_step(cfg, params, cache, batch["tokens"],
+                               batch["pos"])
+        return dec
+
+    # ------------------------------------------------------------------
+    def abstract_inputs(self, cfg: TransformerConfig, shape: str,
+                        reduced: bool = False):
+        spec = (REDUCED_SHAPES if reduced else LM_SHAPES)[shape]
+        b, s = spec["batch"], spec["seq"]
+        kind = spec["kind"]
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            params = self.abstract_params(cfg)
+            opt = jax.eval_shape(init_adamw, params)
+            return (params, opt, {"tokens": tok, "labels": tok})
+        if kind == "prefill":
+            return (self.abstract_params(cfg), {"tokens": tok})
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        return (self.abstract_params(cfg), cache,
+                {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                 "pos": jax.ShapeDtypeStruct((), jnp.int32)})
+
+    # ------------------------------------------------------------------
+    def in_shardings(self, cfg, shape: str, mesh: Mesh,
+                     layout: str = "baseline"):
+        """layout='baseline': FSDP+TP 2-D weight sharding (MaxText-style).
+        layout='pure_dp': batch over EVERY mesh axis, weights replicated —
+        the right call for sub-1B models whose TP matmuls are too small to
+        amortize (the smollm §Perf finding)."""
+        kind = LM_SHAPES[shape]["kind"]
+        b = LM_SHAPES[shape]["batch"]
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_total = 1
+        for a in dp_axes:
+            dp_total *= dict(zip(mesh.axis_names,
+                                 mesh.devices.shape))[a]
+        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        bspec = dp if b % dp_total == 0 and b >= dp_total else None
+
+        if layout == "pure_dp":
+            all_axes = tuple(mesh.axis_names)
+            n_dev = mesh.devices.size
+            bspec = all_axes if (b % n_dev == 0 and b >= n_dev) else bspec
+            pspecs = jax.tree_util.tree_map(
+                lambda l: P(*([None] * len(l.shape))),
+                self.abstract_params(cfg))
+        else:
+            pspecs = tree_param_specs(self.abstract_params(cfg), mesh,
+                                      lm_param_spec)
+        if kind == "train":
+            opt_specs = jax.tree_util.tree_map(
+                lambda _: P(), jax.eval_shape(
+                    init_adamw, self.abstract_params(cfg)))
+            # moments shard exactly like their params
+            from repro.train.optimizer import AdamWState
+            params_like = pspecs
+            opt_specs = AdamWState(step=P(), mu=params_like, nu=params_like)
+            return (pspecs, opt_specs,
+                    {"tokens": P(bspec, None), "labels": P(bspec, None)})
+        if kind == "prefill":
+            return (pspecs, {"tokens": P(bspec, None)})
+        # decode: cache sharding depends on the arch's KV divisibility
+        if cfg.is_mla:
+            if bspec is not None:
+                c_spec = (P(None, bspec, "model", None),
+                          P(None, bspec, "model", None, None))
+            else:
+                c_spec = (P(None, None, "model", None),
+                          P(None, None, "model", None, None))
+        elif self._kv_shardable:
+            if bspec is not None:
+                c_spec = (P(None, bspec, None, "model", None),) * 2
+            else:  # long_500k: batch=1 -> sequence goes on the data axes
+                c_spec = (P(None, None, dp, "model", None),) * 2
+        else:
+            if bspec is not None:
+                c_spec = (P(None, bspec, "model", None, None),) * 2
+            else:
+                c_spec = (P(None, None, dp, None, None),) * 2
+        return (pspecs, c_spec,
+                {"tokens": P(bspec, None), "pos": P()})
+
+
+def model_flops(cfg: TransformerConfig, tokens: int,
+                train: bool = False) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); forward-only = 2·N·D."""
+    n = cfg.active_param_count()
+    per_tok = 6.0 * n if train else 2.0 * n
+    return per_tok * tokens

@@ -1,0 +1,181 @@
+"""pna [gnn] 4L d_hidden=75, aggregators=mean-max-min-std,
+scalers=id-amp-atten [arXiv:2004.05718].
+
+Shapes (assignment):
+  full_graph_sm  n=2,708  e=10,556   d_feat=1,433  (Cora; full-batch)
+  minibatch_lg   n=232,965 e=114,615,892 batch_nodes=1,024 fanout=15-10
+                 (Reddit-scale; real fanout neighbor sampler)
+  ogb_products   n=2,449,029 e=61,859,140 d_feat=100 (full-batch-large)
+  molecule       n=30 e=64 batch=128 (dense-batched; Pallas fused aggregator)
+
+Distribution: edges shard over the batch axes (each shard scatters partial
+segment sums, XLA inserts the psum); node features shard on 'model' for the
+large graphs.  Dims are padded to device-count multiples (recorded below).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.gnn import (PNAConfig, forward_minibatch, init_pna,
+                              loss_dense, loss_sparse)
+from repro.models.common import cross_entropy
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, \
+    init_adamw
+from .lm_common import CellDef
+
+
+def _pad(n, m):
+    return ((n + m - 1) // m) * m
+
+
+PNA_SHAPES: Dict[str, Dict] = {
+    "full_graph_sm": dict(kind="train", regime="sparse", n_nodes=2708,
+                          n_edges=_pad(10556, 512), d_feat=1433, classes=7),
+    "minibatch_lg": dict(kind="train", regime="minibatch", seeds=1024,
+                         fanouts=(15, 10), d_feat=602, classes=41,
+                         block_nodes=_pad(1024 * (1 + 15 + 150), 512),
+                         hop_edges=(_pad(1024 * 15 * 10, 512),
+                                    _pad(1024 * 15, 512))),
+    "ogb_products": dict(kind="train", regime="sparse",
+                         n_nodes=_pad(2449029, 512),
+                         n_edges=_pad(61859140, 512), d_feat=100,
+                         classes=47),
+    "molecule": dict(kind="train", regime="dense", batch=128, n_nodes=30,
+                     d_feat=16, classes=2),
+}
+
+REDUCED_SHAPES: Dict[str, Dict] = {
+    "full_graph_sm": dict(kind="train", regime="sparse", n_nodes=200,
+                          n_edges=800, d_feat=32, classes=7),
+    "minibatch_lg": dict(kind="train", regime="minibatch", seeds=8,
+                         fanouts=(3, 2), d_feat=16, classes=5,
+                         block_nodes=64, hop_edges=(48, 24)),
+    "ogb_products": dict(kind="train", regime="sparse", n_nodes=300,
+                         n_edges=1200, d_feat=16, classes=8),
+    "molecule": dict(kind="train", regime="dense", batch=4, n_nodes=12,
+                     d_feat=8, classes=2),
+}
+
+
+class PNAArch:
+    family = "gnn"
+    name = "pna"
+    opt = AdamWConfig(lr=1e-3)
+
+    def config(self, reduced: bool = False, shape: str = "full_graph_sm"):
+        spec = (REDUCED_SHAPES if reduced else PNA_SHAPES)[shape]
+        return PNAConfig(n_layers=4 if not reduced else 2,
+                         d_in=spec["d_feat"], d_hidden=75 if not reduced
+                         else 16, n_classes=spec["classes"])
+
+    def cells(self):
+        return [CellDef(s, "train") for s in PNA_SHAPES]
+
+    def init(self, cfg, key):
+        return init_pna(cfg, key)
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(lambda: init_pna(cfg, jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    def step_fn(self, cfg: PNAConfig, shape: str, reduced: bool = False):
+        spec = (REDUCED_SHAPES if reduced else PNA_SHAPES)[shape]
+        opt = self.opt
+        regime = spec["regime"]
+
+        if regime == "sparse":
+            def train(params, opt_state, batch):
+                def loss(p):
+                    return loss_sparse(cfg, p, batch["feats"], batch["src"],
+                                       batch["dst"], batch["labels"],
+                                       batch["label_mask"])
+                l, g = jax.value_and_grad(loss)(params)
+                params, opt_state = adamw_update(opt, g, opt_state, params)
+                return params, opt_state, l
+            return train
+
+        if regime == "dense":
+            def train_d(params, opt_state, batch):
+                def loss(p):
+                    # jnp path under pjit; the Pallas kernel is exercised by
+                    # smoke tests + benchmarks on the host device
+                    return loss_dense(cfg, p, batch["feats"], batch["adj"],
+                                      batch["labels"], use_kernel=False)
+                l, g = jax.value_and_grad(loss)(params)
+                params, opt_state = adamw_update(opt, g, opt_state, params)
+                return params, opt_state, l
+            return train_d
+
+        def train_mb(params, opt_state, batch):
+            def loss(p):
+                logits = forward_minibatch(
+                    cfg, p, batch["feats"],
+                    [(batch["src2"], batch["dst2"]),
+                     (batch["src1"], batch["dst1"])],
+                    batch["feats"].shape[0])
+                seed_logits = logits[batch["seed_idx"]]
+                return cross_entropy(seed_logits, batch["labels"])
+            l, g = jax.value_and_grad(loss)(params)
+            params, opt_state = adamw_update(opt, g, opt_state, params)
+            return params, opt_state, l
+        return train_mb
+
+    # ------------------------------------------------------------------
+    def abstract_inputs(self, cfg, shape: str, reduced: bool = False):
+        spec = (REDUCED_SHAPES if reduced else PNA_SHAPES)[shape]
+        params = self.abstract_params(cfg)
+        opt = jax.eval_shape(init_adamw, params)
+        f32, i32 = jnp.float32, jnp.int32
+        S = jax.ShapeDtypeStruct
+        if spec["regime"] == "sparse":
+            n, e = spec["n_nodes"], spec["n_edges"]
+            batch = {"feats": S((n, spec["d_feat"]), f32),
+                     "src": S((e,), i32), "dst": S((e,), i32),
+                     "labels": S((n,), i32), "label_mask": S((n,), f32)}
+        elif spec["regime"] == "dense":
+            b, nn = spec["batch"], spec["n_nodes"]
+            batch = {"feats": S((b, nn, spec["d_feat"]), f32),
+                     "adj": S((b, nn, nn), f32), "labels": S((b,), i32)}
+        else:
+            nb = spec["block_nodes"]
+            e2, e1 = spec["hop_edges"]
+            batch = {"feats": S((nb, spec["d_feat"]), f32),
+                     "src1": S((e1,), i32), "dst1": S((e1,), i32),
+                     "src2": S((e2,), i32), "dst2": S((e2,), i32),
+                     "seed_idx": S((spec["seeds"],), i32),
+                     "labels": S((spec["seeds"],), i32)}
+        return (params, opt, batch)
+
+    # ------------------------------------------------------------------
+    def in_shardings(self, cfg, shape: str, mesh: Mesh):
+        spec = PNA_SHAPES[shape]
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        pspec = jax.tree_util.tree_map(lambda _: P(),
+                                       self.abstract_params(cfg))
+        ospec = AdamWState(step=P(), mu=pspec, nu=pspec)
+        all_ax = tuple(mesh.axis_names)
+        if spec["regime"] == "sparse":
+            if spec["n_nodes"] % 512 == 0:      # padded large graphs
+                nspec = "model"
+            else:                               # Cora: 15 MB, replicate
+                nspec = None
+            batch = {"feats": P(nspec, None), "src": P(dp), "dst": P(dp),
+                     "labels": P(nspec), "label_mask": P(nspec)}
+        elif spec["regime"] == "dense":
+            batch = {"feats": P(dp, None, None), "adj": P(dp, None, None),
+                     "labels": P(dp)}
+        else:
+            batch = {"feats": P("model", None),
+                     "src1": P(dp), "dst1": P(dp),
+                     "src2": P(dp), "dst2": P(dp),
+                     "seed_idx": P(dp), "labels": P(dp)}
+        return (pspec, ospec, batch)
+
+
+ARCH = PNAArch()

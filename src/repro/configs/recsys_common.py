@@ -1,0 +1,96 @@
+"""Shared machinery for the recsys architectures.
+
+Shapes (assignment):
+  train_batch    batch=65,536    (train_step)
+  serve_p99      batch=512       (online scoring)
+  serve_bulk     batch=262,144   (offline scoring)
+  retrieval_cand batch=1, n_candidates=1,000,000 (candidate scoring)
+
+Embedding tables row-shard on 'model' (vocabs are multiples of 16); lookups
+are jnp.take under pjit (XLA SPMD lowers the sharded-dim gather to the
+Megatron partial-lookup + all-reduce pattern; the explicit shard_map twin
+lives in distributed/collectives.make_sharded_lookup and is cross-checked
+in tests).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, \
+    init_adamw
+from .lm_common import CellDef
+
+RECSYS_SHAPES: Dict[str, Dict] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    # assignment: 1,000,000 candidates — padded to 2^20 so the candidate
+    # axis divides the 256/512-device meshes (padding rows are masked)
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_048_576),
+}
+
+REDUCED_RECSYS_SHAPES: Dict[str, Dict] = {
+    "train_batch": dict(kind="train", batch=32),
+    "serve_p99": dict(kind="serve", batch=8),
+    "serve_bulk": dict(kind="serve", batch=64),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=256),
+}
+
+
+def dp_of(mesh: Mesh):
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+
+def all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def recsys_param_spec_tree(params_shape, mesh: Mesh):
+    """Tables -> row-sharded on model; 2-D dense weights -> out-dim on model
+    when divisible; rest replicated."""
+    model = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def rule(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shape = leaf.shape
+        if ("emb" in name or "tables" in name) and len(shape) == 2:
+            return P("model" if shape[0] % model == 0 else None, None)
+        if len(shape) == 2 and shape[1] % model == 0 and shape[1] >= 512:
+            return P(None, "model")
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+class RecsysArchBase:
+    family = "recsys"
+    opt = AdamWConfig(lr=1e-3)
+
+    def cells(self):
+        return [CellDef(s, spec["kind"])
+                for s, spec in RECSYS_SHAPES.items()]
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(
+            lambda: self.init(cfg, jax.random.PRNGKey(0)))
+
+    def make_train(self, loss_fn):
+        opt = self.opt
+
+        def train(params, opt_state, batch):
+            l, g = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = adamw_update(opt, g, opt_state, params)
+            return params, opt_state, l
+        return train
+
+    def opt_specs(self, pspec):
+        return AdamWState(step=P(), mu=pspec, nu=pspec)

@@ -1,0 +1,80 @@
+"""sasrec [recsys] embed_dim=50 n_blocks=2 n_heads=1 seq_len=50
+interaction=self-attn-seq [arXiv:1808.09781]."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.recsys import (SASRecConfig, init_sasrec, sasrec_forward,
+                                 sasrec_loss)
+from repro.train.optimizer import init_adamw
+from .recsys_common import (RECSYS_SHAPES, REDUCED_RECSYS_SHAPES,
+                            RecsysArchBase, dp_of, all_axes,
+                            recsys_param_spec_tree)
+
+FULL = SASRecConfig(n_items=1_048_576)
+REDUCED = SASRecConfig(n_items=512, embed_dim=16, n_blocks=1, seq_len=10)
+
+N_NEG = 64
+
+
+class SASRecArch(RecsysArchBase):
+    name = "sasrec"
+
+    def config(self, reduced: bool = False, shape: str | None = None):
+        return REDUCED if reduced else FULL
+
+    def init(self, cfg, key):
+        return init_sasrec(cfg, key)
+
+    def step_fn(self, cfg: SASRecConfig, shape: str, reduced: bool = False):
+        kind = RECSYS_SHAPES[shape]["kind"]
+        if kind == "train":
+            return self.make_train(functools.partial(sasrec_loss, cfg))
+        if kind == "serve":
+            def serve(params, batch):
+                h = sasrec_forward(cfg, params, batch["seq"])
+                tgt = params["item_emb"][jnp.clip(batch["target"], 0)]
+                return jnp.sum(h[:, -1] * tgt, axis=-1)
+            return serve
+
+        def retrieve(params, batch, cand_ids):
+            h = sasrec_forward(cfg, params, batch["seq"])[:, -1]  # (1,E)
+            ce = params["item_emb"][jnp.clip(cand_ids, 0)]        # (N,E)
+            return (h @ ce.T)[0]                                  # (N,)
+        return retrieve
+
+    def abstract_inputs(self, cfg, shape: str, reduced: bool = False):
+        spec = (REDUCED_RECSYS_SHAPES if reduced else RECSYS_SHAPES)[shape]
+        params = self.abstract_params(cfg)
+        b = spec["batch"]
+        S = jax.ShapeDtypeStruct
+        if spec["kind"] == "train":
+            batch = {"seq": S((b, cfg.seq_len), jnp.int32),
+                     "pos": S((b, cfg.seq_len), jnp.int32),
+                     "neg": S((b, cfg.seq_len, N_NEG), jnp.int32)}
+            return (params, jax.eval_shape(init_adamw, params), batch)
+        if spec["kind"] == "serve":
+            batch = {"seq": S((b, cfg.seq_len), jnp.int32),
+                     "target": S((b,), jnp.int32)}
+            return (params, batch)
+        batch = {"seq": S((1, cfg.seq_len), jnp.int32)}
+        return (params, batch, S((spec["n_candidates"],), jnp.int32))
+
+    def in_shardings(self, cfg, shape: str, mesh: Mesh):
+        spec = RECSYS_SHAPES[shape]
+        dp = dp_of(mesh)
+        pspec = recsys_param_spec_tree(self.abstract_params(cfg), mesh)
+        if spec["kind"] == "train":
+            bs = {"seq": P(dp, None), "pos": P(dp, None),
+                  "neg": P(dp, None, None)}
+            return (pspec, self.opt_specs(pspec), bs)
+        if spec["kind"] == "serve":
+            return (pspec, {"seq": P(dp, None), "target": P(dp)})
+        return (pspec, {"seq": P(None, None)}, P(all_axes(mesh)))
+
+
+ARCH = SASRecArch()

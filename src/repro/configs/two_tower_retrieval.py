@@ -1,0 +1,139 @@
+"""two-tower-retrieval [recsys] embed_dim=256 tower_mlp=1024-512-256
+interaction=dot, sampled-softmax retrieval [RecSys'19 (YouTube)].
+
+This is the paper-representative architecture: ``retrieval_cand`` scores one
+query embedding against a 10^6-item corpus under a structured predicate —
+exactly ACORN's hybrid-search problem.  The step implements the
+filtered-top-k path with an explicit shard_map (per-shard top-k, k-sized
+all-gather, local merge — the ACORN distributed serving pattern); the graph
+(ACORN-γ) path over the same corpus runs in examples/distributed_retrieval
+and the benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.recsys import (TwoTowerConfig, init_two_tower,
+                                 two_tower_loss, user_embed, item_embed)
+from repro.train.optimizer import init_adamw
+from .recsys_common import (RECSYS_SHAPES, REDUCED_RECSYS_SHAPES,
+                            RecsysArchBase, dp_of, all_axes,
+                            recsys_param_spec_tree)
+
+FULL = TwoTowerConfig(n_users=4_194_304, n_items=2_097_152)
+REDUCED = TwoTowerConfig(n_users=1024, n_items=512, n_user_feats=2,
+                         embed_dim=16, tower_dims=(32, 16))
+
+TOPK = 100
+
+
+def filtered_retrieval_step(mesh: Mesh, cfg: TwoTowerConfig, k: int = TOPK):
+    """(params, batch, cand_embs (N,E'), mask (B,N)) -> (ids, scores).
+
+    Candidates shard over every mesh axis; each shard computes masked dot
+    scores + a local top-k; the k-candidates-per-shard merge is an
+    all-gather of k rows (tiny) + local reduce.
+    """
+    axes = all_axes(mesh)
+
+    def step(params, batch, cand_embs, mask):
+        u = user_embed(cfg, params, batch)                 # (B, E') replicated
+
+        def local(u_l, cand_l, mask_l, base_l):
+            s = u_l @ cand_l.T                             # (B, N_local)
+            s = jnp.where(mask_l, s, -jnp.inf)
+            kl = min(k, s.shape[1])                        # small host meshes
+            top_s, top_i = jax.lax.top_k(s, kl)
+            ids = base_l[0] + top_i
+            for ax in axes:
+                top_s = jax.lax.all_gather(top_s, ax, axis=1, tiled=True)
+                ids = jax.lax.all_gather(ids, ax, axis=1, tiled=True)
+            s2, pos = jax.lax.top_k(top_s, min(k, top_s.shape[1]))
+            return jnp.take_along_axis(ids, pos, axis=1), s2
+
+        n = cand_embs.shape[0]
+        base = jnp.arange(0, n, dtype=jnp.int32)
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(axes, None), P(None, axes), P(axes)),
+            out_specs=(P(), P()), check_vma=False,
+        )(u, cand_embs, mask, base)
+
+    return step
+
+
+class TwoTowerArch(RecsysArchBase):
+    name = "two-tower-retrieval"
+
+    def config(self, reduced: bool = False, shape: str | None = None):
+        return REDUCED if reduced else FULL
+
+    def init(self, cfg, key):
+        return init_two_tower(cfg, key)
+
+    def _batch_struct(self, cfg, b):
+        S = jax.ShapeDtypeStruct
+        return {
+            "user_id": S((b,), jnp.int32),
+            "user_feats": S((b, cfg.n_user_feats), jnp.int32),
+            "item_id": S((b,), jnp.int32),
+            "logq": S((b,), jnp.float32),
+        }
+
+    def step_fn(self, cfg, shape: str, reduced: bool = False,
+                mesh: Mesh | None = None):
+        kind = RECSYS_SHAPES[shape]["kind"]
+        if kind == "train":
+            return self.make_train(functools.partial(two_tower_loss, cfg))
+        if kind == "serve":
+            # online scoring: user embedding + dot against request items
+            def serve(params, batch):
+                u = user_embed(cfg, params, batch)
+                v = item_embed(cfg, params, batch["item_id"])
+                return jnp.sum(u * v, axis=-1)
+            return serve
+        if mesh is not None:
+            return filtered_retrieval_step(mesh, cfg)
+
+        def retrieve_local(params, batch, cand_embs, mask):
+            from repro.kernels import filtered_topk
+            u = user_embed(cfg, params, batch)
+            return filtered_topk(u, cand_embs, mask, min(TOPK,
+                                 cand_embs.shape[0]), metric="ip")
+        return retrieve_local
+
+    def abstract_inputs(self, cfg, shape: str, reduced: bool = False):
+        spec = (REDUCED_RECSYS_SHAPES if reduced else RECSYS_SHAPES)[shape]
+        params = self.abstract_params(cfg)
+        b = spec["batch"]
+        batch = self._batch_struct(cfg, b)
+        if spec["kind"] == "train":
+            return (params, jax.eval_shape(init_adamw, params), batch)
+        if spec["kind"] == "serve":
+            return (params, batch)
+        n = spec["n_candidates"]
+        e = cfg.tower_dims[-1]
+        S = jax.ShapeDtypeStruct
+        return (params, batch, S((n, e), jnp.float32), S((b, n), jnp.bool_))
+
+    def in_shardings(self, cfg, shape: str, mesh: Mesh):
+        spec = RECSYS_SHAPES[shape]
+        dp = dp_of(mesh)
+        axes = all_axes(mesh)
+        pspec = recsys_param_spec_tree(self.abstract_params(cfg), mesh)
+        bs = {"user_id": P(dp), "user_feats": P(dp, None),
+              "item_id": P(dp), "logq": P(dp)}
+        if spec["kind"] == "train":
+            return (pspec, self.opt_specs(pspec), bs)
+        if spec["kind"] == "serve":
+            return (pspec, bs)
+        rep = {k: P(*([None] * (2 if k == "user_feats" else 1)))
+               for k in bs}
+        return (pspec, rep, P(axes, None), P(None, axes))
+
+
+ARCH = TwoTowerArch()

@@ -1,0 +1,26 @@
+"""ACORN core: predicate-agnostic hybrid search over vectors + structured data."""
+from .predicates import (AttributeTable, Predicate, Equals, OneOf, Between,
+                         ContainsAny, RegexMatch, And, Or, Not, TruePredicate,
+                         SelectivitySketch, evaluate, evaluate_batch,
+                         selectivity, pack_multihot)
+from .graph import LayeredGraph, assign_levels, neighbor_rows, memory_bytes
+from .bruteforce import masked_topk, ground_truth, recall_at_k, pairwise_sq_l2
+from .build import build_acorn_gamma, build_acorn_1, build_hnsw, build_bulk
+from .search import hybrid_search, ann_search, SearchStats, get_neighbors
+from .baselines import (prefilter_search, postfilter_search,
+                        OraclePartitionIndex)
+from .index import AcornConfig, HybridIndex
+from .correlation import query_correlation
+
+__all__ = [
+    "AttributeTable", "Predicate", "Equals", "OneOf", "Between",
+    "ContainsAny", "RegexMatch", "And", "Or", "Not", "TruePredicate",
+    "SelectivitySketch", "evaluate", "evaluate_batch", "selectivity",
+    "pack_multihot", "LayeredGraph", "assign_levels", "neighbor_rows",
+    "memory_bytes", "masked_topk", "ground_truth", "recall_at_k",
+    "pairwise_sq_l2", "build_acorn_gamma", "build_acorn_1", "build_hnsw",
+    "build_bulk", "hybrid_search", "ann_search", "SearchStats",
+    "get_neighbors", "prefilter_search", "postfilter_search",
+    "OraclePartitionIndex", "AcornConfig", "HybridIndex",
+    "query_correlation",
+]

@@ -1,0 +1,116 @@
+"""Baseline hybrid-search methods the paper compares against (§3.2, §7.2).
+
+* pre-filtering  — exact masked brute force (perfect recall, O(s·n)).
+* post-filtering — over-search an HNSW index for ~K/s candidates, then
+  filter (the paper's strengthened variant: K/s, not K).
+* oracle partition — one HNSW per predicate over X_p: the theoretical ideal
+  (§4) ACORN emulates; only constructible for small known predicate sets.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bruteforce import masked_topk
+from .build import build_hnsw
+from .graph import INVALID, LayeredGraph
+from .search import ann_search
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# pre-filtering
+# ---------------------------------------------------------------------------
+
+
+def prefilter_search(xq: Array, x: Array, pass_mask: Array, k: int,
+                     metric: str = "l2") -> Tuple[Array, Array]:
+    """Exact brute force over the predicate-passing rows (query-first args)."""
+    return masked_topk(xq, x, pass_mask, k, metric=metric)
+
+
+# ---------------------------------------------------------------------------
+# post-filtering
+# ---------------------------------------------------------------------------
+
+
+def _bucket(v: int, lo: int, hi: int) -> int:
+    """Round up to a power of two in [lo, hi] to bound jit recompilations."""
+    b = lo
+    while b < min(v, hi):
+        b *= 2
+    return min(b, hi)
+
+
+def postfilter_search(
+    graph: LayeredGraph,
+    x: Array,
+    xq: Array,
+    pass_mask: Array,
+    k: int,
+    selectivity: float,
+    ef: int = 64,
+    m: int = 32,
+    metric: str = "l2",
+    max_oversearch: int = 4096,
+) -> Tuple[Array, Array]:
+    """HNSW post-filtering with K/s over-search (paper §7.2).
+
+    ``selectivity`` is the (estimated) predicate selectivity used to size the
+    candidate pool; the pool size is bucketed to powers of two so repeated
+    calls hit a small number of jit caches.
+    """
+    s = max(selectivity, 1e-6)
+    want = int(math.ceil(k / s))
+    kk = _bucket(max(want, k), k, max_oversearch)
+    ef_eff = _bucket(max(ef, kk), max(ef, k), max(max_oversearch, ef))
+    ids, dists, _ = ann_search(graph, x, xq, k=kk, ef=ef_eff, m=m,
+                               metric=metric)
+    safe = jnp.clip(ids, 0, pass_mask.shape[1] - 1)
+    ok = (ids >= 0) & jnp.take_along_axis(pass_mask, safe, axis=1)
+    dists = jnp.where(ok, dists, jnp.inf)
+    order = jnp.argsort(dists, axis=1)[:, :k]
+    out_ids = jnp.take_along_axis(jnp.where(ok, ids, INVALID), order, axis=1)
+    out_d = jnp.take_along_axis(dists, order, axis=1)
+    out_ids = jnp.where(jnp.isfinite(out_d), out_ids, INVALID)
+    return out_ids, out_d
+
+
+# ---------------------------------------------------------------------------
+# oracle partition index (§4)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OraclePartitionIndex:
+    """One HNSW index per (known) predicate id. The impractical ideal."""
+
+    partitions: Dict[int, Tuple[LayeredGraph, Array, Array]]  # pid -> (graph, x_p, global_ids)
+    m: int
+
+    @staticmethod
+    def build(x: Array, masks: Dict[int, np.ndarray], key: Array, M: int = 16,
+              efc: Optional[int] = None) -> "OraclePartitionIndex":
+        parts = {}
+        for pid, mask in masks.items():
+            gids = np.nonzero(np.asarray(mask))[0].astype(np.int32)
+            xp = jnp.asarray(x)[jnp.asarray(gids)]
+            key, sub = jax.random.split(key)
+            g = build_hnsw(xp, sub, M=M, efc=efc)
+            parts[pid] = (g, xp, jnp.asarray(gids))
+        return OraclePartitionIndex(partitions=parts, m=M)
+
+    def search(self, pid: int, xq: Array, k: int, ef: int = 64,
+               metric: str = "l2"):
+        graph, xp, gids = self.partitions[pid]
+        ids, dists, stats = ann_search(graph, xp, xq, k=k, ef=ef, m=self.m,
+                                       metric=metric)
+        out = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)],
+                        INVALID)
+        return out, dists, stats

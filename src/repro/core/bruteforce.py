@@ -1,0 +1,114 @@
+"""Blocked (masked) exact top-k distance search.
+
+This is the substrate for: pre-filtering (paper §3.2), ground-truth
+generation, exact KNN graphs inside the bulk builder, and post-filter
+reranking.  The Pallas kernel ``repro.kernels.filtered_topk`` implements the
+same contract for TPU; this module is the pure-jnp path (and the kernel's
+oracle lives in ``kernels/filtered_topk/ref.py`` which calls into here).
+
+Distances are squared L2 (the metric used by SIFT1M/Paper benchmarks); a
+``metric='ip'`` option covers inner-product corpora (CLIP/DPR embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -jnp.inf
+
+
+def pairwise_sq_l2(q: Array, x: Array) -> Array:
+    """(B, d), (n, d) -> (B, n) squared L2 distances."""
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    xn = jnp.sum(x * x, axis=-1)
+    return qn + xn[None, :] - 2.0 * q @ x.T
+
+
+def _scores(q: Array, x: Array, metric: str) -> Array:
+    """Higher is better."""
+    if metric == "l2":
+        return -pairwise_sq_l2(q, x)
+    if metric == "ip":
+        return q @ x.T
+    raise ValueError(metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block"))
+def masked_topk(
+    q: Array,
+    x: Array,
+    mask: Optional[Array],
+    k: int,
+    metric: str = "l2",
+    block: int = 8192,
+) -> Tuple[Array, Array]:
+    """Exact top-k over rows of ``x`` passing ``mask``.
+
+    q:    (B, d) queries
+    x:    (n, d) corpus
+    mask: (B, n) bool or None (None = unfiltered ANN ground truth)
+    returns (ids, dists): (B, k) int32 / (B, k) f32 squared-L2 (or -ip),
+    ids are -1 where fewer than k rows pass.
+
+    Scans the corpus in blocks and keeps a running top-k, so peak memory is
+    O(B * block) instead of O(B * n).
+    """
+    n = x.shape[0]
+    bq = q.shape[0]
+    nblocks = (n + block - 1) // block
+    npad = nblocks * block
+    xp = jnp.pad(x, ((0, npad - n), (0, 0)))
+    maskp = None
+    if mask is not None:
+        maskp = jnp.pad(mask, ((0, 0), (0, npad - n)))
+
+    def body(carry, i):
+        best_s, best_i = carry
+        start = i * block
+        xb = jax.lax.dynamic_slice_in_dim(xp, start, block, axis=0)
+        s = _scores(q, xb, metric)  # (B, block)
+        ids = start + jnp.arange(block, dtype=jnp.int32)
+        valid = ids < n
+        if maskp is not None:
+            mb = jax.lax.dynamic_slice_in_dim(maskp, start, block, axis=1)
+            valid = valid[None, :] & mb
+        else:
+            valid = jnp.broadcast_to(valid[None, :], s.shape)
+        s = jnp.where(valid, s, NEG_INF)
+        cs = jnp.concatenate([best_s, s], axis=1)
+        ci = jnp.concatenate([best_i, jnp.broadcast_to(ids[None, :], s.shape)], axis=1)
+        ts, ti = jax.lax.top_k(cs, k)
+        return (ts, jnp.take_along_axis(ci, ti, axis=1)), None
+
+    init = (
+        jnp.full((bq, k), NEG_INF, dtype=q.dtype),
+        jnp.full((bq, k), -1, dtype=jnp.int32),
+    )
+    (best_s, best_i), _ = jax.lax.scan(body, init, jnp.arange(nblocks))
+    best_i = jnp.where(best_s == NEG_INF, -1, best_i)
+    dists = -best_s if metric == "l2" else best_s
+    return best_i, dists
+
+
+def ground_truth(q: Array, x: Array, mask: Optional[Array], k: int,
+                 metric: str = "l2") -> Array:
+    """Exact hybrid-search answers -> (B, k) ids (-1 padded)."""
+    ids, _ = masked_topk(q, x, mask, k, metric=metric)
+    return ids
+
+
+def recall_at_k(retrieved: Array, gt: Array) -> float:
+    """recall@K = |G ∩ R| / |G| averaged over queries (paper §3.1; when fewer
+    than K ground-truth answers exist, the denominator is the true count)."""
+    r = jnp.asarray(retrieved)
+    g = jnp.asarray(gt)
+    valid_g = g >= 0
+    hits = (r[:, :, None] == g[:, None, :]) & valid_g[:, None, :] & (r >= 0)[:, :, None]
+    inter = hits.any(axis=1).sum(axis=1)
+    denom = jnp.maximum(valid_g.sum(axis=1), 1)
+    return float(jnp.mean(inter / denom))

@@ -1,0 +1,60 @@
+"""Query correlation statistic C(D, Q) (paper §3.2.1).
+
+C(D,Q) = E_{(x,p) in Q} [ E_R[ g(x, R) ] - g(x, X_p) ]
+
+with g(x, S) = min_{y in S} dist(x, y) and R a uniformly drawn random subset
+of X with |X_p| elements.  Positive C = query vectors are closer to their
+true predicate-passing targets than chance (positive correlation); negative
+C = the predicate cluster sits away from the query (the regime that breaks
+post-filtering).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bruteforce import masked_topk
+
+Array = jax.Array
+
+
+def min_dist(xq: Array, x: Array, mask: Array) -> Array:
+    """(B,) min squared-L2 distance from each query to masked rows."""
+    _, d = masked_topk(xq, x, mask, 1)
+    return d[:, 0]
+
+
+def query_correlation(
+    xq: Array,
+    x: Array,
+    pass_masks: Array,
+    key: Array,
+    n_mc: int = 8,
+) -> float:
+    """Monte-Carlo estimate of C(D, Q) for a batch of hybrid queries.
+
+    pass_masks: (B, n) bool — X_{p_i} indicator per query.
+    For each query, E_R[g] is estimated by drawing ``n_mc`` random subsets of
+    size |X_p| via thresholded uniforms (each row kept w.p. |X_p|/n — a
+    binomial surrogate for the uniform-without-replacement subset; unbiased
+    for the min-distance expectation at these sizes).
+    """
+    b, n = pass_masks.shape
+    sizes = pass_masks.sum(axis=1)  # (B,)
+    p_keep = sizes / n
+
+    g_true = min_dist(xq, x, pass_masks)
+
+    def one_draw(k):
+        u = jax.random.uniform(k, (b, n))
+        rmask = u < p_keep[:, None]
+        # guard against empty draws: force one random row on
+        any_on = rmask.any(axis=1)
+        fallback = jax.random.randint(k, (b,), 0, n)
+        rmask = rmask.at[jnp.arange(b), fallback].set(
+            rmask[jnp.arange(b), fallback] | ~any_on)
+        return min_dist(xq, x, rmask)
+
+    keys = jax.random.split(key, n_mc)
+    g_rand = jnp.stack([one_draw(k) for k in keys]).mean(axis=0)
+    return float(jnp.mean(g_rand - g_true))

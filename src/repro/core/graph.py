@@ -1,0 +1,92 @@
+"""Fixed-shape layered proximity graph (TPU adaptation of HNSW storage).
+
+All neighbor lists are padded ``int32`` arrays holding *global* node ids with
+``-1`` padding.  Level ``l`` stores only the nodes whose assigned maximum
+level is >= l; ``pos[l]`` maps global id -> level-local row (or -1).
+
+The structure is a NamedTuple => a pytree: it shards (each field can be laid
+out with a PartitionSpec), checkpoints, and crosses jit boundaries untouched.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+INVALID = -1
+
+
+class LayeredGraph(NamedTuple):
+    # per level l: (n_l, cap_l) int32 global neighbor ids, -1 padded
+    neighbors: Tuple[Array, ...]
+    # per level l: (n,) int32 -> row index in neighbors[l], or -1
+    pos: Tuple[Array, ...]
+    # per level l: (n_l,) int32 global ids present at level l
+    node_ids: Tuple[Array, ...]
+    entry_point: Array  # () int32 global id
+    levels: Array  # (n,) int32 max level per node
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.neighbors)
+
+    @property
+    def n(self) -> int:
+        return int(self.levels.shape[0])
+
+    def cap(self, level: int) -> int:
+        return int(self.neighbors[level].shape[1])
+
+
+def level_constant(M: int) -> float:
+    """m_L = 1 / ln(M) — the paper keeps HNSW's level normalization so that
+    predicate subgraphs sample levels at the same rate as an oracle HNSW
+    partition built with the same M (paper §6.3.1 'Hierarchy')."""
+    return 1.0 / math.log(M)
+
+
+def assign_levels(key: Array, n: int, M: int, max_level: int | None = None) -> Array:
+    """Exponentially-decaying level assignment, identical to HNSW."""
+    mL = level_constant(M)
+    u = jax.random.uniform(key, (n,), minval=1e-12, maxval=1.0)
+    lv = jnp.floor(-jnp.log(u) * mL).astype(jnp.int32)
+    if max_level is None:
+        max_level = max(1, int(math.log(max(n, 2)) / math.log(M)) + 1)
+    return jnp.minimum(lv, max_level)
+
+
+def neighbor_rows(graph: LayeredGraph, level: int, gids: Array) -> Array:
+    """Neighbor lists for global ids ``gids`` at ``level`` -> (..., cap_l).
+
+    Invalid gids (or gids absent from the level) yield all -1 rows.
+    """
+    pos = graph.pos[level]
+    safe = jnp.clip(gids, 0, pos.shape[0] - 1)
+    rows = pos[safe]
+    present = (gids >= 0) & (rows >= 0)
+    rows_safe = jnp.clip(rows, 0, graph.neighbors[level].shape[0] - 1)
+    nbrs = graph.neighbors[level][rows_safe]
+    return jnp.where(present[..., None], nbrs, INVALID)
+
+
+def memory_bytes(graph: LayeredGraph) -> int:
+    """Index space footprint in bytes (edges only; vectors counted separately)."""
+    total = 0
+    for a in graph.neighbors:
+        total += a.size * a.dtype.itemsize
+    for a in graph.pos:
+        total += a.size * a.dtype.itemsize
+    for a in graph.node_ids:
+        total += a.size * a.dtype.itemsize
+    return total
+
+
+def average_out_degree(graph: LayeredGraph, level: int) -> float:
+    nb = graph.neighbors[level]
+    if nb.shape[0] == 0:
+        return 0.0
+    return float(jnp.mean(jnp.sum(nb >= 0, axis=1)))

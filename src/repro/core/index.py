@@ -1,0 +1,137 @@
+"""High-level hybrid-search index with ACORN's cost-based routing (§5.2).
+
+``HybridIndex`` owns the vectors, attribute table, the ACORN graph, a
+selectivity sketch, and implements the paper's routing rule: queries whose
+estimated selectivity falls below s_min = 1/γ are answered by pre-filtered
+brute force (exact); all others traverse the predicate subgraph.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .baselines import prefilter_search
+from .build import build_acorn_1, build_acorn_gamma
+from .graph import INVALID, LayeredGraph, memory_bytes
+from .predicates import (AttributeTable, Predicate, SelectivitySketch,
+                         evaluate_batch)
+from .search import SearchStats, hybrid_search
+
+Array = jax.Array
+
+
+@dataclass
+class AcornConfig:
+    M: int = 16
+    gamma: int = 8
+    m_beta: Optional[int] = None       # default 2M
+    ef_search: int = 64
+    variant: str = "acorn-gamma"       # or "acorn-1"
+    metric: str = "l2"
+    compress: bool = True
+    max_expansions: int = 512
+
+    @property
+    def s_min(self) -> float:
+        return 1.0 / self.gamma
+
+    def resolved_m_beta(self) -> int:
+        return self.m_beta if self.m_beta is not None else 2 * self.M
+
+
+@dataclass
+class HybridIndex:
+    x: Array
+    table: AttributeTable
+    graph: LayeredGraph
+    config: AcornConfig
+    sketch: SelectivitySketch
+    build_seconds: float = 0.0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(x: Array, table: AttributeTable, config: AcornConfig,
+              seed: int = 0) -> "HybridIndex":
+        key = jax.random.PRNGKey(seed)
+        t0 = time.perf_counter()
+        if config.variant == "acorn-gamma":
+            graph = build_acorn_gamma(
+                x, key, M=config.M, gamma=config.gamma,
+                m_beta=config.resolved_m_beta(), compress=config.compress)
+        elif config.variant == "acorn-1":
+            graph = build_acorn_1(x, key, M=config.M)
+        else:
+            raise ValueError(config.variant)
+        jax.block_until_ready(graph.neighbors[0])
+        tti = time.perf_counter() - t0
+        sketch = SelectivitySketch.build(table, seed=seed)
+        return HybridIndex(x=x, table=table, graph=graph, config=config,
+                           sketch=sketch, build_seconds=tti)
+
+    # ------------------------------------------------------------------
+    @property
+    def index_bytes(self) -> int:
+        return memory_bytes(self.graph)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.index_bytes + self.x.size * self.x.dtype.itemsize
+
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        xq: Array,
+        predicates: Sequence[Predicate],
+        k: int = 10,
+        ef: Optional[int] = None,
+        force_route: Optional[str] = None,
+    ) -> Tuple[Array, Array, dict]:
+        """Batched hybrid search with per-query cost-based routing.
+
+        Returns (ids (B,k), dists (B,k), info) where info records the route
+        taken per query and search stats.
+        """
+        cfg = self.config
+        ef = ef or cfg.ef_search
+        masks = evaluate_batch(predicates, self.table)  # (B, n)
+        s_est = np.array([self.sketch.estimate(p) for p in predicates])
+        if force_route == "graph":
+            use_pre = np.zeros(len(predicates), bool)
+        elif force_route == "prefilter":
+            use_pre = np.ones(len(predicates), bool)
+        else:
+            use_pre = s_est < cfg.s_min
+
+        b = xq.shape[0]
+        out_ids = np.full((b, k), INVALID, np.int32)
+        out_d = np.full((b, k), np.inf, np.float32)
+        dist_comps = np.zeros((b,), np.int64)
+
+        pre_idx = np.nonzero(use_pre)[0]
+        gr_idx = np.nonzero(~use_pre)[0]
+        if len(pre_idx):
+            ids, d = prefilter_search(xq[pre_idx], self.x, masks[pre_idx], k,
+                                      metric=cfg.metric)
+            out_ids[pre_idx] = np.asarray(ids)
+            out_d[pre_idx] = np.asarray(d)
+            dist_comps[pre_idx] = np.asarray(masks[pre_idx].sum(axis=1))
+        if len(gr_idx):
+            variant = cfg.variant
+            ids, d, stats = hybrid_search(
+                self.graph, self.x, xq[gr_idx], masks[gr_idx], k=k, ef=ef,
+                variant=variant, m=cfg.M, m_beta=cfg.resolved_m_beta(),
+                metric=cfg.metric,
+                compressed_level0=cfg.compress and variant == "acorn-gamma",
+                max_expansions=cfg.max_expansions)
+            out_ids[gr_idx] = np.asarray(ids)
+            out_d[gr_idx] = np.asarray(d)
+            dist_comps[gr_idx] = np.asarray(stats.dist_comps)
+
+        info = dict(routes=np.where(use_pre, "prefilter", "graph"),
+                    selectivity_est=s_est, dist_comps=dist_comps)
+        return jnp.asarray(out_ids), jnp.asarray(out_d), info

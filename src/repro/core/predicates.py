@@ -1,0 +1,271 @@
+"""Predicate-agnostic structured-filter system (paper §3.1, §7.1).
+
+A predicate is a small expression tree over the columns of an
+:class:`AttributeTable`.  The supported operators cover everything the paper
+evaluates: ``equals`` (SIFT1M/Paper), ``between`` over dates (TripClick),
+``contains-any`` over keyword lists (TripClick areas, LAION keywords) and
+``regex-match`` over captions (LAION).  Arbitrary boolean combinations are
+allowed — the predicate set is unbounded, which is exactly the regime ACORN
+targets.
+
+Evaluation strategy (TPU adaptation, DESIGN.md §2): predicates are evaluated
+*vectorized* into a boolean pass-mask over the dataset (the paper's own FAISS
+implementation uses bitsets for its ``contains`` predicates).  Regex is the
+one operator with no XLA representation; it is evaluated host-side with
+``re`` into the same mask.  Everything else is pure ``jnp`` and jittable.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Mapping, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Attribute storage
+# ---------------------------------------------------------------------------
+
+_BITS = 32
+
+
+def pack_multihot(keyword_lists, n_keywords: int) -> np.ndarray:
+    """Pack per-row keyword-id lists into a (n, ceil(n_keywords/32)) uint32 bitset."""
+    n = len(keyword_lists)
+    words = (n_keywords + _BITS - 1) // _BITS
+    out = np.zeros((n, words), dtype=np.uint32)
+    for i, kws in enumerate(keyword_lists):
+        for k in kws:
+            out[i, k // _BITS] |= np.uint32(1) << np.uint32(k % _BITS)
+    return out
+
+
+def keywords_to_bitset(keywords, n_keywords: int) -> np.ndarray:
+    words = (n_keywords + _BITS - 1) // _BITS
+    q = np.zeros((words,), dtype=np.uint32)
+    for k in keywords:
+        q[k // _BITS] |= np.uint32(1) << np.uint32(k % _BITS)
+    return q
+
+
+@dataclass
+class AttributeTable:
+    """Columnar structured data attached to the vector dataset.
+
+    int_cols:    name -> (n,) int32            (categories, dates, prices)
+    bitset_cols: name -> (n, W) uint32         (packed multi-hot keyword sets)
+    str_cols:    name -> list[str] / np object (host-only; regex target)
+    n_keywords:  name -> vocabulary size for each bitset column
+    """
+
+    int_cols: Dict[str, Array]
+    bitset_cols: Dict[str, Array]
+    str_cols: Dict[str, np.ndarray]
+    n_keywords: Dict[str, int]
+
+    @property
+    def n(self) -> int:
+        for c in self.int_cols.values():
+            return int(c.shape[0])
+        for c in self.bitset_cols.values():
+            return int(c.shape[0])
+        for c in self.str_cols.values():
+            return int(len(c))
+        raise ValueError("empty AttributeTable")
+
+    def take(self, idx: np.ndarray) -> "AttributeTable":
+        return AttributeTable(
+            int_cols={k: v[idx] for k, v in self.int_cols.items()},
+            bitset_cols={k: v[idx] for k, v in self.bitset_cols.items()},
+            str_cols={k: np.asarray(v, dtype=object)[np.asarray(idx)]
+                      for k, v in self.str_cols.items()},
+            n_keywords=dict(self.n_keywords),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Predicate expression tree
+# ---------------------------------------------------------------------------
+
+
+class Predicate:
+    """Base class. Composable with &, |, ~."""
+
+    def __and__(self, other: "Predicate") -> "Predicate":
+        return And((self, other))
+
+    def __or__(self, other: "Predicate") -> "Predicate":
+        return Or((self, other))
+
+    def __invert__(self) -> "Predicate":
+        return Not(self)
+
+    @property
+    def needs_host(self) -> bool:
+        return False
+
+
+@dataclass(frozen=True)
+class Equals(Predicate):
+    column: str
+    value: int
+
+
+@dataclass(frozen=True)
+class OneOf(Predicate):
+    column: str
+    values: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class Between(Predicate):
+    """Inclusive range predicate (TripClick publication dates)."""
+
+    column: str
+    lo: int
+    hi: int
+
+
+@dataclass(frozen=True)
+class ContainsAny(Predicate):
+    """True when the row's keyword set intersects ``keywords``."""
+
+    column: str
+    keywords: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class RegexMatch(Predicate):
+    """Host-evaluated regex over a string column (LAION captions)."""
+
+    column: str
+    pattern: str
+
+    @property
+    def needs_host(self) -> bool:
+        return True
+
+
+@dataclass(frozen=True)
+class And(Predicate):
+    parts: Tuple[Predicate, ...]
+
+    @property
+    def needs_host(self) -> bool:
+        return any(p.needs_host for p in self.parts)
+
+
+@dataclass(frozen=True)
+class Or(Predicate):
+    parts: Tuple[Predicate, ...]
+
+    @property
+    def needs_host(self) -> bool:
+        return any(p.needs_host for p in self.parts)
+
+
+@dataclass(frozen=True)
+class Not(Predicate):
+    part: Predicate
+
+    @property
+    def needs_host(self) -> bool:
+        return self.part.needs_host
+
+
+@dataclass(frozen=True)
+class TruePredicate(Predicate):
+    """Matches everything — hybrid search degenerates to plain ANN."""
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+
+def evaluate(pred: Predicate, table: AttributeTable) -> Array:
+    """Evaluate ``pred`` into a (n,) bool pass-mask.
+
+    Pure-jnp unless the tree contains a RegexMatch, in which case the regex
+    leaves are evaluated host-side and the combination still happens in jnp.
+    """
+    if isinstance(pred, TruePredicate):
+        return jnp.ones((table.n,), dtype=bool)
+    if isinstance(pred, Equals):
+        return table.int_cols[pred.column] == pred.value
+    if isinstance(pred, OneOf):
+        col = table.int_cols[pred.column]
+        vals = jnp.asarray(pred.values, dtype=col.dtype)
+        return (col[:, None] == vals[None, :]).any(axis=-1)
+    if isinstance(pred, Between):
+        col = table.int_cols[pred.column]
+        return (col >= pred.lo) & (col <= pred.hi)
+    if isinstance(pred, ContainsAny):
+        col = table.bitset_cols[pred.column]
+        q = jnp.asarray(
+            keywords_to_bitset(pred.keywords, table.n_keywords[pred.column])
+        )
+        return ((col & q[None, :]) != 0).any(axis=-1)
+    if isinstance(pred, RegexMatch):
+        rx = re.compile(pred.pattern)
+        col = table.str_cols[pred.column]
+        mask = np.fromiter((rx.search(s) is not None for s in col),
+                           dtype=bool, count=len(col))
+        return jnp.asarray(mask)
+    if isinstance(pred, And):
+        out = evaluate(pred.parts[0], table)
+        for p in pred.parts[1:]:
+            out = out & evaluate(p, table)
+        return out
+    if isinstance(pred, Or):
+        out = evaluate(pred.parts[0], table)
+        for p in pred.parts[1:]:
+            out = out | evaluate(p, table)
+        return out
+    if isinstance(pred, Not):
+        return ~evaluate(pred.part, table)
+    raise TypeError(f"unknown predicate {type(pred)}")
+
+
+def evaluate_batch(preds, table: AttributeTable) -> Array:
+    """Evaluate a list of predicates -> (B, n) bool."""
+    return jnp.stack([evaluate(p, table) for p in preds], axis=0)
+
+
+def selectivity(pred: Predicate, table: AttributeTable) -> float:
+    return float(jnp.mean(evaluate(pred, table)))
+
+
+# ---------------------------------------------------------------------------
+# Selectivity estimation (cost-based routing, paper §5.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SelectivitySketch:
+    """Uniform row sample used to estimate predicate selectivity.
+
+    The paper's cost model routes queries with estimated s < 1/γ to
+    pre-filtering; this sketch is the "estimated empirically with or without
+    knowing the predicate set" estimator from §1/§5.2.  A ~4k row sample
+    gives ±1.5% absolute error at 95% confidence (binomial), comfortably
+    tight for a 1/γ threshold decision.
+    """
+
+    sample: AttributeTable
+    n_total: int
+
+    @staticmethod
+    def build(table: AttributeTable, sample_size: int = 4096,
+              seed: int = 0) -> "SelectivitySketch":
+        n = table.n
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(n, size=min(sample_size, n), replace=False)
+        return SelectivitySketch(sample=table.take(idx), n_total=n)
+
+    def estimate(self, pred: Predicate) -> float:
+        return selectivity(pred, self.sample)

@@ -1,0 +1,338 @@
+"""ACORN predicate-subgraph traversal (paper Algorithms 1-2, Figure 4).
+
+TPU adaptation (DESIGN.md §2): the greedy beam search runs as a
+``jax.lax.while_loop`` over fixed-size sorted beams, ``vmap``-ed over the
+query batch; all heaps/sets become fixed-shape masked arrays.  Converged
+lanes run masked no-op bodies (vmap of while_loop executes the body for all
+lanes until every lane's condition is false).
+
+Neighbor-lookup strategies (Figure 4):
+  'plain'    — first entries of N^l(c), no predicate (HNSW search +
+               construction-time metadata-agnostic lookups).
+  'filter'   — scan N^l(c), keep predicate-passing, truncate to M (ACORN-γ,
+               uncompressed levels — Fig 4a).
+  'compress' — first M_β entries filtered directly; remaining entries
+               expanded to their own neighbor lists (2-hop recovery of
+               pruned edges), filtered, truncated to M (Fig 4b).
+  'two_hop'  — full 1-hop + 2-hop expansion, filter, truncate to M
+               (ACORN-1 — Fig 4c).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import INVALID, LayeredGraph, neighbor_rows
+
+Array = jax.Array
+
+INF = jnp.inf
+
+
+class SearchStats(NamedTuple):
+    dist_comps: Array  # per-query number of distance computations
+    hops: Array        # per-query number of expanded nodes (level 0)
+
+
+# ---------------------------------------------------------------------------
+# small fixed-shape helpers
+# ---------------------------------------------------------------------------
+
+
+def first_m_true(ids: Array, ok: Array, m: int) -> Array:
+    """Pack the first m ids where ok, preserving order; -1 padded. (C,)->(m,)."""
+    rank = jnp.cumsum(ok) - 1
+    scatter_to = jnp.where(ok & (rank < m), rank, m)
+    out = jnp.full((m,), INVALID, jnp.int32)
+    return out.at[scatter_to].set(jnp.where(ok, ids, INVALID), mode="drop")
+
+
+def dedup_mask(ids: Array) -> Array:
+    """True at the first occurrence of each valid id (order preserved)."""
+    c = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    s = ids[order]
+    first_sorted = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    # within equal ids, argsort(stable) keeps original order -> first in the
+    # sorted run is the earliest original occurrence
+    mask = jnp.zeros((c,), bool).at[order].set(first_sorted)
+    return mask & (ids >= 0)
+
+
+# ---------------------------------------------------------------------------
+# neighbor lookup (Figure 4)
+# ---------------------------------------------------------------------------
+
+
+def get_neighbors(
+    graph: LayeredGraph,
+    level: int,
+    c: Array,
+    pass_mask: Optional[Array],
+    strategy: str,
+    m: int,
+    m_beta: int,
+    visited: Optional[Array] = None,
+) -> Array:
+    """Return up to ``m`` neighbor ids of node ``c`` for the query predicate.
+
+    ``visited`` (when given) is applied *before* the first-M truncation:
+    the M-bound exists to cap distance computations per expansion (§6.3.1
+    'Bounded Degree'); already-visited nodes cost no distance computation,
+    and truncating them away starves exploration in dense regions (visible
+    as an ACORN-1 recall plateau — EXPERIMENTS.md §Repro-notes)."""
+    row = neighbor_rows(graph, level, c)  # (cap,)
+
+    if strategy == "plain":
+        # HNSW scans the complete neighbor list (degree already bounded by
+        # construction); no predicate, no truncation.
+        return row
+
+    def passes(ids: Array) -> Array:
+        safe = jnp.clip(ids, 0, pass_mask.shape[0] - 1)
+        ok = (ids >= 0) & pass_mask[safe]
+        if visited is not None:
+            ok = ok & ~visited[safe]
+        return ok
+
+    if strategy == "filter":
+        return first_m_true(row, passes(row), m)
+
+    if strategy == "compress":
+        head = row[:m_beta]
+        tail = row[m_beta:]
+        hop2 = neighbor_rows(graph, level, tail)  # (cap-m_beta, cap)
+        cand = jnp.concatenate(
+            [head, jnp.concatenate([tail[:, None], hop2], axis=1).reshape(-1)]
+        )
+        ok = passes(cand) & dedup_mask(cand)
+        return first_m_true(cand, ok, m)
+
+    if strategy == "two_hop":
+        hop2 = neighbor_rows(graph, level, row)  # (cap, cap)
+        # breadth-first interleave: the j-th neighbor of every 1-hop node
+        # before the (j+1)-th of any — keeps the first-M selection diverse
+        # instead of draining the nearest neighbor's list first
+        cand = jnp.concatenate([row, hop2.T.reshape(-1)])
+        ok = passes(cand) & dedup_mask(cand)
+        return first_m_true(cand, ok, m)
+
+    raise ValueError(strategy)
+
+
+def _strategy_for(variant: str, level: int, compressed_level0: bool) -> str:
+    if variant == "hnsw":
+        return "plain"
+    if variant == "acorn-1":
+        return "two_hop"
+    if variant == "acorn-gamma":
+        if level == 0 and compressed_level0:
+            return "compress"
+        return "filter"
+    raise ValueError(variant)
+
+
+# ---------------------------------------------------------------------------
+# the search itself
+# ---------------------------------------------------------------------------
+
+
+def _dists(x: Array, ids: Array, xq: Array, metric: str) -> Array:
+    safe = jnp.clip(ids, 0, x.shape[0] - 1)
+    v = x[safe]
+    if metric == "l2":
+        d = jnp.sum((v - xq[None, :]) ** 2, axis=-1)
+    elif metric == "ip":
+        d = -(v @ xq)
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, INF)
+
+
+def _greedy_level(graph, x, level, e, e_dist, xq, pass_mask, strategy, m,
+                  m_beta, metric, max_steps, n_dc):
+    """ef=1 greedy descent step at one level (Algorithm 1 upper levels)."""
+
+    def cond(state):
+        _, _, moved, it, _ = state
+        return moved & (it < max_steps)
+
+    def body(state):
+        e, ed, _, it, dc = state
+        nbrs = get_neighbors(graph, level, e, pass_mask, strategy, m, m_beta)
+        d = _dists(x, nbrs, xq, metric)
+        dc = dc + jnp.sum(nbrs >= 0, dtype=jnp.int32)
+        j = jnp.argmin(d)
+        better = d[j] < ed
+        e2 = jnp.where(better, nbrs[j], e)
+        ed2 = jnp.where(better, d[j], ed)
+        return (e2, ed2, better, it + 1, dc)
+
+    e, ed, _, _, n_dc = jax.lax.while_loop(
+        cond, body, (e, e_dist, jnp.asarray(True), jnp.asarray(0, jnp.int32), n_dc)
+    )
+    return e, ed, n_dc
+
+
+def _search_impl(
+    graph: LayeredGraph,
+    x: Array,
+    xq: Array,
+    pass_mask: Optional[Array],
+    k: int,
+    ef: int,
+    variant: str,
+    m: int,
+    m_beta: int,
+    metric: str,
+    compressed_level0: bool,
+    max_expansions: int,
+) -> Tuple[Array, Array, SearchStats]:
+    """Single-query hybrid search; vmapped by the public wrappers."""
+    n = x.shape[0]
+    top = graph.num_levels - 1
+    e = graph.entry_point
+    ed = _dists(x, e[None], xq, metric)[0]
+    dc = jnp.asarray(1, jnp.int32)
+
+    # ---- stage 1 + upper levels: greedy descent (Algorithm 1) ----
+    for lvl in range(top, 0, -1):
+        strat = _strategy_for(variant, lvl, compressed_level0)
+        e, ed, dc = _greedy_level(graph, x, lvl, e, ed, xq, pass_mask, strat,
+                                  m, m_beta, metric, 128, dc)
+
+    # ---- level 0: beam search (Algorithm 2) ----
+    strat0 = _strategy_for(variant, 0, compressed_level0)
+    beam_ids = jnp.full((ef,), INVALID, jnp.int32).at[0].set(e)
+    beam_d = jnp.full((ef,), INF).at[0].set(ed)
+    beam_exp = jnp.zeros((ef,), bool)
+    if pass_mask is None:
+        e_pass = jnp.asarray(True)
+    else:
+        e_pass = pass_mask[jnp.clip(e, 0, n - 1)] & (e >= 0)
+    beam_pass = jnp.zeros((ef,), bool).at[0].set(e_pass)
+    visited = jnp.zeros((n,), bool).at[jnp.clip(e, 0, n - 1)].set(True)
+
+    # Multi-seed (beyond-paper, EXPERIMENTS.md §Repro-notes): when the
+    # predicate-passing set is multi-region, a single entry confines the
+    # beam to one region.  The γ-dense level-1 neighborhood of the landing
+    # point spans regions, so its predicate-passing members seed the beam
+    # too (costing the same ≤m distance computations the descent's last
+    # step already paid in spirit; ef must simply be > m).
+    if pass_mask is not None and graph.num_levels > 1 and ef > m:
+        strat1 = _strategy_for(variant, 1, compressed_level0)
+        seeds = get_neighbors(graph, 1, e, pass_mask, strat1, m, m_beta)
+        sd = _dists(x, seeds, xq, metric)
+        dc = dc + jnp.sum(seeds >= 0, dtype=jnp.int32)
+        dup = seeds == e
+        sd = jnp.where(dup, INF, sd)
+        beam_ids = beam_ids.at[1:m + 1].set(jnp.where(dup, INVALID, seeds))
+        beam_d = beam_d.at[1:m + 1].set(sd)
+        beam_pass = beam_pass.at[1:m + 1].set((seeds >= 0) & ~dup)
+        visited = visited.at[jnp.clip(seeds, 0, n - 1)].max(seeds >= 0)
+
+    def cond(state):
+        beam_ids, beam_d, beam_exp, _, _, it, _ = state
+        unexp = (beam_ids >= 0) & ~beam_exp
+        any_unexp = unexp.any()
+        best_unexp = jnp.where(unexp, beam_d, INF).min()
+        full = (beam_ids >= 0).all()
+        worst = jnp.where(full, beam_d.max(), INF)
+        return any_unexp & (best_unexp <= worst) & (it < max_expansions)
+
+    def body(state):
+        beam_ids, beam_d, beam_exp, beam_pass, visited, it, dc = state
+        active = cond(state)  # no-op guard for converged vmap lanes
+        unexp = (beam_ids >= 0) & ~beam_exp
+        sel = jnp.argmin(jnp.where(unexp, beam_d, INF))
+        c = beam_ids[sel]
+        beam_exp2 = beam_exp.at[sel].set(True)
+
+        nbrs = get_neighbors(graph, 0, c, pass_mask, strat0, m, m_beta,
+                             visited=visited)
+        fresh = (nbrs >= 0) & ~visited[jnp.clip(nbrs, 0, n - 1)]
+        nd = jnp.where(fresh, _dists(x, nbrs, xq, metric), INF)
+        dc2 = dc + jnp.sum(fresh, dtype=jnp.int32)
+        visited2 = visited.at[jnp.clip(nbrs, 0, n - 1)].max(nbrs >= 0)
+
+        # merge into beam: (ef + m) sort, keep best ef
+        all_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, INVALID)])
+        all_d = jnp.concatenate([beam_d, nd])
+        all_exp = jnp.concatenate([beam_exp2, jnp.zeros_like(fresh)])
+        all_pass = jnp.concatenate([beam_pass, fresh])
+        order = jnp.argsort(all_d)[:ef]
+        new_state = (
+            all_ids[order], all_d[order], all_exp[order], all_pass[order],
+            visited2, it + 1, dc2,
+        )
+        old_state = (beam_ids, beam_d, beam_exp, beam_pass, visited, it + 1, dc)
+        return jax.tree_util.tree_map(
+            lambda nw, od: jnp.where(
+                jnp.reshape(active, (1,) * nw.ndim), nw, od), new_state, old_state
+        )
+
+    state = (beam_ids, beam_d, beam_exp, beam_pass, visited,
+             jnp.asarray(0, jnp.int32), dc)
+    beam_ids, beam_d, beam_exp, beam_pass, visited, hops, dc = (
+        jax.lax.while_loop(cond, body, state)
+    )
+
+    # final top-k among predicate-passing beam entries
+    final_d = jnp.where(beam_pass & (beam_ids >= 0), beam_d, INF)
+    order = jnp.argsort(final_d)[:k]
+    out_ids = jnp.where(jnp.isfinite(final_d[order]), beam_ids[order], INVALID)
+    out_d = final_d[order]
+    return out_ids, out_d, SearchStats(dist_comps=dc, hops=hops)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "variant", "m", "m_beta", "metric",
+                     "compressed_level0", "max_expansions"),
+)
+def hybrid_search(
+    graph: LayeredGraph,
+    x: Array,
+    xq: Array,
+    pass_mask: Array,
+    k: int = 10,
+    ef: int = 64,
+    variant: str = "acorn-gamma",
+    m: int = 16,
+    m_beta: int = 32,
+    metric: str = "l2",
+    compressed_level0: bool = True,
+    max_expansions: int = 512,
+):
+    """Batched hybrid search.
+
+    xq: (B, d) queries; pass_mask: (B, n) predicate masks.
+    Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
+    """
+    fn = lambda q, msk: _search_impl(
+        graph, x, q, msk, k, ef, variant, m, m_beta, metric,
+        compressed_level0, max_expansions)
+    return jax.vmap(fn)(xq, pass_mask)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "m", "metric", "max_expansions"),
+)
+def ann_search(
+    graph: LayeredGraph,
+    x: Array,
+    xq: Array,
+    k: int = 10,
+    ef: int = 64,
+    m: int = 32,
+    metric: str = "l2",
+    max_expansions: int = 512,
+):
+    """Plain (unfiltered) HNSW ANN search — baseline substrate."""
+    fn = lambda q: _search_impl(
+        graph, x, q, None, k, ef, "hnsw", m, 0, metric, False, max_expansions)
+    return jax.vmap(fn)(xq)

@@ -1,0 +1,2 @@
+from .synthetic import (make_lcps_dataset, make_hcps_dataset, make_workload,
+                        Dataset, Workload)

@@ -1,0 +1,100 @@
+"""Per-architecture sharding rules (PartitionSpec trees).
+
+Scheme (MaxText-style 2-D weight sharding):
+  * the "output-feature" dim of big weights goes on the tensor axis
+    ('model') when divisible — heads, d_ff, experts, vocab;
+  * the other dim goes on the batch axes (FSDP-style: XLA all-gathers the
+    weight at use, reduce-scatters its gradient);
+  * anything indivisible stays replicated (e.g. smollm's 15 heads, qwen3's
+    8 KV heads — attention weights then shard only along FSDP).
+
+These are *hints*: XLA SPMD inserts the collectives; the roofline reads
+them back out of the compiled HLO.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0 and n >= k
+
+
+def _axis_sizes(mesh: Mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    data = sizes.get("data", 1) * sizes.get("pod", 1)
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return model, data, dp
+
+
+def lm_param_spec(path: str, shape, mesh: Mesh) -> P:
+    """Map one LM parameter (by name + shape) to a PartitionSpec."""
+    model, data, dp = _axis_sizes(mesh)
+    name = path.split("/")[-1]
+    if name == "embed":                       # (V, D)
+        v, d = shape
+        return P("model" if _div(v, model) else None,
+                 dp if _div(d, data) else None)
+    if name in ("final_norm", "ln1", "ln2", "b", "q_norm", "k_norm"):
+        return P(*([None] * len(shape)))
+    if name in ("w_gate", "w_up", "ws_gate", "ws_up", "wq", "w_uk", "w_uv"):
+        if len(shape) == 4:                   # (L, E, D, F) — experts
+            return P(None, "model" if _div(shape[1], model) else None,
+                     None, None)
+        l, a, b = shape
+        return P(None, dp if _div(a, data) else None,
+                 "model" if _div(b, model) else None)
+    if name in ("w_down", "ws_down", "wo"):
+        if len(shape) == 4:                   # (L, E, F, D)
+            return P(None, "model" if _div(shape[1], model) else None,
+                     None, None)
+        l, a, b = shape
+        return P(None, "model" if _div(a, model) else None,
+                 dp if _div(b, data) else None)
+    if name in ("wk", "wv"):
+        l, a, b = shape                       # shard KV out-dim only if clean
+        return P(None, dp if _div(a, data) else None,
+                 "model" if _div(b, model) else None)
+    if name in ("router", "w_dkv"):
+        l, a, b = shape
+        return P(None, dp if _div(a, data) else None, None)
+    # fallback: replicate
+    return P(*([None] * len(shape)))
+
+
+def tree_param_specs(params_shape, mesh: Mesh, rule=lm_param_spec):
+    """Build a PartitionSpec tree for an abstract params pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        specs.append(rule(name, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# common activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Batch sharded over all DP axes, everything else replicated."""
+    _, _, dp = _axis_sizes(mesh)
+    return P(dp, *([None] * extra_dims))
+
+
+def replicated(mesh: Mesh, ndims: int) -> P:
+    return P(*([None] * ndims))

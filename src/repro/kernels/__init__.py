@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+filtered_topk   — masked distance + exact top-k (pre-filter fallback,
+                  post-filter rerank, retrieval_cand scoring)
+gather_distance — neighbor-row DMA gather + fused distance (beam search)
+embedding_bag   — ragged gather + bag reduce (recsys lookup hot path)
+pna_aggregate   — fused mean/max/min/std segment aggregation (PNA GNN)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper
+with use_kernel routing), ref.py (pure-jnp oracle used by the allclose
+sweeps in tests/test_kernels.py).
+"""
+from .filtered_topk.ops import filtered_topk
+from .gather_distance.ops import gather_distance
+from .embedding_bag.ops import embedding_bag
+from .pna_aggregate.ops import pna_aggregate, pna_aggregate_segment

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for embedding_bag: jnp.take + masked reduce
+(the canonical JAX EmbeddingBag construction, taxonomy §RecSys)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def embedding_bag_ref(ids, table, mode: str = "sum"):
+    """ids (B, L) int32 (-1 padded), table (V, D) -> (B, D)."""
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe, axis=0)          # (B, L, D)
+    valid = (ids >= 0)[..., None]
+    summed = jnp.sum(jnp.where(valid, rows, 0.0), axis=1)
+    if mode == "sum":
+        return summed
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(ids >= 0, axis=1, keepdims=True), 1)
+        return summed / cnt.astype(table.dtype)
+    raise ValueError(mode)
+
+
+def embedding_bag_segment_ref(flat_ids, segment_ids, table, num_segments,
+                              mode: str = "sum"):
+    """Segment-form oracle (jax.ops.segment_sum construction)."""
+    rows = jnp.take(table, jnp.clip(flat_ids, 0, table.shape[0] - 1), axis=0)
+    rows = jnp.where((flat_ids >= 0)[:, None], rows, 0.0)
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments)
+    if mode == "sum":
+        return summed
+    cnt = jax.ops.segment_sum((flat_ids >= 0).astype(table.dtype),
+                              segment_ids, num_segments)
+    return summed / jnp.maximum(cnt, 1.0)[:, None]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the filtered_topk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def filtered_topk_ref(q, x, mask, k: int, metric: str = "l2"):
+    """Exact masked top-k.  Returns (ids, dists) with ids == -1 where fewer
+    than k rows pass; dists are squared L2 (or negative IP)."""
+    if metric == "l2":
+        d2 = (jnp.sum(q * q, axis=1, keepdims=True) + jnp.sum(x * x, axis=1)[None, :]
+              - 2.0 * q @ x.T)
+        s = -d2
+    elif metric == "ip":
+        s = q @ x.T
+    else:
+        raise ValueError(metric)
+    s = jnp.where(mask, s, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(s, k)
+    ids = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    dists = jnp.where(metric == "l2", -top_s, top_s) if False else (
+        -top_s if metric == "l2" else top_s)
+    return ids, dists

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the gather_distance kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def gather_distance_ref(ids, q, x, metric: str = "l2"):
+    """ids (B, M) int32 (-1 padded), q (B, d), x (n, d) -> (B, M) f32.
+
+    Distances to invalid ids are +inf.  l2 = squared L2; ip = negated inner
+    product (lower = better, matching the beam-search ordering)."""
+    safe = jnp.clip(ids, 0, x.shape[0] - 1)
+    rows = x[safe]  # (B, M, d)
+    if metric == "l2":
+        d = jnp.sum((rows - q[:, None, :]) ** 2, axis=-1)
+    elif metric == "ip":
+        d = -jnp.einsum("bmd,bd->bm", rows, q)
+    else:
+        raise ValueError(metric)
+    return jnp.where(ids >= 0, d, jnp.inf)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the PNA fused aggregator (dense and segment forms)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pna_aggregate_ref(adj, feats):
+    """adj (B, N, N) {0,1}, feats (B, N, F) -> (B, N, 4F) [mean|max|min|std]."""
+    cnt = jnp.sum(adj, axis=2, keepdims=True)
+    denom = jnp.maximum(cnt, 1.0)
+    s = jnp.einsum("bij,bjf->bif", adj, feats)
+    ssq = jnp.einsum("bij,bjf->bif", adj, feats * feats)
+    mean = s / denom
+    var = jnp.maximum(ssq / denom - mean * mean, 0.0)
+    std = jnp.sqrt(var + 1e-12)  # +eps: d/dx sqrt has infinite grad at 0
+    m = adj[:, :, :, None] > 0
+    hmax = jnp.max(jnp.where(m, feats[:, None, :, :], -1e30), axis=2)
+    hmin = jnp.min(jnp.where(m, feats[:, None, :, :], 1e30), axis=2)
+    has = cnt > 0
+    hmax = jnp.where(has, hmax, 0.0)
+    hmin = jnp.where(has, hmin, 0.0)
+    return jnp.concatenate([mean, hmax, hmin, std], axis=2)
+
+
+def pna_aggregate_segment_ref(messages, dst, num_nodes):
+    """Sparse form: messages (E, F) scattered to dst (E,) -> (N, 4F).
+
+    The JAX-native GNN message-passing primitive (segment_sum/max/min) —
+    this IS the system's sparse path, not a stand-in."""
+    ones = jnp.ones((messages.shape[0],), messages.dtype)
+    cnt = jax.ops.segment_sum(ones, dst, num_nodes)
+    denom = jnp.maximum(cnt, 1.0)[:, None]
+    s = jax.ops.segment_sum(messages, dst, num_nodes)
+    ssq = jax.ops.segment_sum(messages * messages, dst, num_nodes)
+    mean = s / denom
+    var = jnp.maximum(ssq / denom - mean * mean, 0.0)
+    std = jnp.sqrt(var + 1e-12)  # +eps: d/dx sqrt has infinite grad at 0
+    hmax = jax.ops.segment_max(messages, dst, num_nodes)
+    hmin = jax.ops.segment_min(messages, dst, num_nodes)
+    has = (cnt > 0)[:, None]
+    hmax = jnp.where(has, hmax, 0.0)
+    hmin = jnp.where(has, hmin, 0.0)
+    return jnp.concatenate([mean, hmax, hmin, std], axis=1)

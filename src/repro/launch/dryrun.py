@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell: build the production
+mesh, lower the arch's step with its sharding annotations against
+ShapeDtypeStruct inputs (no allocation), ``.compile()`` it, and record
+memory_analysis + cost_analysis + parsed collective bytes into
+``experiments/dryrun/<cell>.json``.  §Roofline and §Perf read these files.
+
+The two XLA_FLAGS lines above are the very first statements — before any
+other import — because jax locks the device count at first init.  Nothing
+else in the repo sets this flag (smoke tests and benchmarks see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import inspect
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.distributed.sharding import named
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _model_flops(arch, cfg, shape: str):
+    try:
+        from repro.configs.lm_common import LM_SHAPES, model_flops
+        if getattr(arch, "family", "") == "lm":
+            spec = LM_SHAPES[shape]
+            kind = spec["kind"]
+            tokens = spec["batch"] * (spec["seq"] if kind != "decode" else 1)
+            return model_flops(cfg, tokens, train=(kind == "train"))
+    except Exception:
+        pass
+    return None
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    arch = get_arch(arch_id)
+    cell = {c.shape: c for c in arch.cells()}[shape]
+    tag = f"{arch_id}__{shape}__{_mesh_tag(multi_pod)}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+
+    if cell.skip:
+        rec = dict(arch=arch_id, shape=shape, mesh=_mesh_tag(multi_pod),
+                   status="skipped", reason=cell.skip)
+        json.dump(rec, open(path, "w"), indent=1)
+        if verbose:
+            print(f"[skip] {tag}: {cell.skip}")
+        return rec
+
+    cfg = arch.config(reduced=False, shape=shape)
+    kw = {}
+    if "mesh" in inspect.signature(arch.step_fn).parameters:
+        kw["mesh"] = mesh
+    step = arch.step_fn(cfg, shape, **kw)
+    abstract = arch.abstract_inputs(cfg, shape)
+    in_specs = arch.in_shardings(cfg, shape, mesh)
+    out_specs = (arch.out_shardings(cfg, shape, mesh)
+                 if hasattr(arch, "out_shardings") else None)
+
+    t0 = time.perf_counter()
+    jit_kw = dict(in_shardings=named(mesh, in_specs))
+    if out_specs is not None:
+        jit_kw["out_shardings"] = named(mesh, out_specs)
+    lowered = jax.jit(step, **jit_kw).lower(*abstract)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {k: getattr(mem, k) for k in dir(mem)
+                   if not k.startswith("_")
+                   and isinstance(getattr(mem, k), (int, float))}
+    except Exception as e:  # CPU backend may not implement it
+        mem_rec = {"unavailable": str(e)}
+
+    roof = analyze(compiled, model_flops=_model_flops(arch, cfg, shape))
+    rec = dict(arch=arch_id, shape=shape, mesh=_mesh_tag(multi_pod),
+               chips=chips, status="ok",
+               lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               memory_analysis=mem_rec,
+               roofline=roof.to_dict(chips))
+    json.dump(rec, open(path, "w"), indent=1)
+    if verbose:
+        r = rec["roofline"]
+        print(f"[ok]   {tag}: compile {t_compile:.0f}s | "
+              f"Tc {r['t_compute']:.2e} Tm {r['t_memory']:.2e} "
+              f"Tx {r['t_collective']:.2e} -> {r['bottleneck']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-acorn", action="store_true", default=True)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    arch_ids = [args.arch] if args.arch else (
+        ARCH_IDS + (["acorn"] if args.include_acorn else []))
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+
+    failures = []
+    for arch_id in arch_ids:
+        arch = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else [c.shape
+                                                  for c in arch.cells()]
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch_id, shape, mp, args.out)
+                except Exception as e:
+                    tag = f"{arch_id}__{shape}__{_mesh_tag(mp)}"
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+                    failures.append(tag)
+                    json.dump(dict(arch=arch_id, shape=shape,
+                                   mesh=_mesh_tag(mp), status="failed",
+                                   error=str(e)),
+                              open(os.path.join(args.out, tag + ".json"),
+                                   "w"), indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

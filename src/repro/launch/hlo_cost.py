@@ -1,0 +1,321 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — under
+scan-over-layers models that under-reports FLOPs/bytes/collectives by the
+trip count (verified in tests/test_hlo_cost.py).  This module re-derives the
+three roofline inputs from the compiled HLO *text*, multiplying loop-body
+costs by the ``known_trip_count`` backend_config that XLA attaches to
+scheduled while ops, recursing through fusions/calls, and accounting
+collective bytes with the same multipliers.
+
+Cost model (deliberately simple, dot-dominated workloads):
+  flops: dot = 2·|out|·contracted_size; elementwise-ish = |out|.
+  bytes: per top-level instruction = operand bytes + output bytes;
+         gather/scatter/(dynamic-)slice/DUS count 2·|out| + indices rather
+         than the full operand (matching XLA's touched-bytes semantics);
+         fusion interiors are not double-counted (fusion boundary only).
+  collectives: max(in, out) bytes per op — a ring all-gather/all-reduce
+         moves ~(P-1)/P·size per chip, so this is a tight per-chip proxy.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _parse_instr(line: str):
+    """'%n = SHAPE opcode(rest' -> (name, shape, opcode, rest) or None.
+
+    Hand-rolled because tuple shapes embed '/*index=N*/' comments (regex
+    character classes over '=' mis-split them)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        shape = rhs[: i + 1]
+        tail = rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape = rhs[:sp]
+        tail = rhs[sp + 1:]
+    par = tail.find("(")
+    if par < 0:
+        return None
+    opcode = tail[:par].strip()
+    rest = tail[par + 1:]
+    if not opcode or not opcode.replace("-", "").isalnum():
+        return None
+    return name, shape, opcode, rest
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count[\\"=:{]+n[\\":]+(\d+)')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_INDEXED = ("gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+            "slice")
+_FREE = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "iota", "partition-id", "replica-id", "broadcast",
+         "reshape")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # operand list + attrs (raw tail)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll.items():
+            d = self.coll.setdefault(k, {"count": 0, "bytes": 0.0})
+            d["count"] += v["count"] * mult
+            d["bytes"] += v["bytes"] * mult
+
+
+def _split_operands(rest: str) -> List[str]:
+    """Names of %operands in the call parens (stops at closing paren)."""
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    for tok in cur.split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok[1:])
+    return out
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if not line.strip():
+                cur = None
+                continue
+            mc = _COMP_RE.match(line)
+            if mc and line.rstrip().endswith("{"):
+                cur = mc.group(1)
+                self.comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            parsed = _parse_instr(line)
+            if parsed is None:
+                continue
+            name, shape, opcode, rest = parsed
+            ins = Instr(name=name, shape=shape, opcode=opcode, rest=rest,
+                        operands=_split_operands(rest))
+            self.comps[cur].append(ins)
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # cycle guard
+        table = {i.name: i.shape for i in self.comps.get(comp, [])}
+        total = Cost()
+        for ins in self.comps.get(comp, []):
+            total.add(self._instr_cost(ins, table))
+        self._memo[comp] = total
+        return total
+
+    def _instr_cost(self, ins: Instr, table: Dict[str, str]) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        out_elems, out_bytes = _shape_elems_bytes(ins.shape)
+        opnd_bytes = sum(_shape_elems_bytes(table.get(o, ""))[1]
+                         for o in ins.operands)
+
+        if op in _FREE or op.endswith("-done"):
+            return c
+
+        base = op.replace("-start", "")
+        if base in COLLECTIVES:
+            # ring model per-chip wire bytes: all-reduce = 2(P-1)/P·size
+            # (~2x), all-gather/reduce-scatter/permute/all-to-all = ~1x
+            b = float(max(out_bytes, opnd_bytes))
+            if base == "all-reduce":
+                b *= 2.0
+            c.coll_bytes += b
+            d = c.coll.setdefault(base, {"count": 0, "bytes": 0.0})
+            d["count"] += 1
+            d["bytes"] += b
+            c.bytes += out_bytes + opnd_bytes
+            return c
+
+        if op == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            mb, mc2 = _BODY_RE.search(ins.rest), _COND_RE.search(ins.rest)
+            if mb:
+                c.add(self.comp_cost(mb.group(1)), trip)
+            if mc2:
+                c.add(self.comp_cost(mc2.group(1)), trip)
+            return c
+
+        if op == "conditional":
+            mb = _BRANCH_RE.search(ins.rest)
+            if mb:
+                branches = [b.strip().lstrip("%")
+                            for b in mb.group(1).split(",")]
+                costs = [self.comp_cost(b) for b in branches]
+                if costs:
+                    # execute one branch; take the max as the bound
+                    worst = max(costs, key=lambda x: x.flops + x.bytes)
+                    c.add(worst)
+            return c
+
+        if op in ("fusion", "call", "async-start"):
+            mcalls = _CALLS_RE.search(ins.rest) or \
+                re.search(r"to_apply=%([\w.\-]+)", ins.rest)
+            indexed_inner = False
+            if mcalls:
+                inner = self.comp_cost(mcalls.group(1))
+                c.flops += inner.flops
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.coll.items():
+                    d = c.coll.setdefault(k, {"count": 0, "bytes": 0.0})
+                    d["count"] += v["count"]
+                    d["bytes"] += v["bytes"]
+                indexed_inner = any(
+                    i.opcode in _INDEXED
+                    for i in self.comps.get(mcalls.group(1), []))
+            if indexed_inner:
+                # gather/scatter fusion: only the indexed rows are touched,
+                # not the whole table operand
+                capped = sum(min(_shape_elems_bytes(table.get(o, ""))[1],
+                                 2 * out_bytes + 64)
+                             for o in ins.operands)
+                c.bytes += out_bytes + capped
+            else:
+                c.bytes += out_bytes + opnd_bytes  # fusion boundary only
+            return c
+
+        if op == "dot":
+            lhs_shape = table.get(ins.operands[0], "") if ins.operands else ""
+            dims = _shape_dims(lhs_shape)
+            mcd = _LHS_C_RE.search(ins.rest)
+            csize = 1
+            if mcd and mcd.group(1):
+                for d in mcd.group(1).split(","):
+                    if int(d) < len(dims):
+                        csize *= dims[int(d)]
+            c.flops += 2.0 * out_elems * csize
+            c.bytes += out_bytes + opnd_bytes
+            return c
+
+        if op in _INDEXED:
+            c.bytes += 2.0 * out_bytes + 64
+            return c
+
+        if op in ("sort", "custom-call", "rng", "rng-bit-generator"):
+            c.flops += out_elems
+            c.bytes += out_bytes + opnd_bytes
+            return c
+
+        if op in ("copy", "copy-start", "transpose", "reverse", "pad",
+                  "concatenate", "select-and-scatter", "reduce-window"):
+            c.bytes += out_bytes + opnd_bytes
+            return c
+
+        # generic elementwise / reduce / compare / convert / exp / ...
+        c.flops += out_elems
+        c.bytes += out_bytes + opnd_bytes
+        return c
+
+    # ------------------------------------------------------------------
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(text: str) -> Cost:
+    return HloCostModel(text).total()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required by the dry-run contract: only
+launch/dryrun.py sets the 512-device XLA override.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod ("data","model"); 2 pods adds a leading "pod"
+    axis.  At 1000+ nodes the pod axis generalizes to N pods; data-parallel
+    collectives are hierarchical (ICI within pod, DCI across)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over the actually-available local devices (tests/examples).
+
+    Lays out (data, model) using every local device; model_axis must divide
+    the device count."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh (('pod',)? + ('data',))."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: the three chosen cells, baseline + variants.
+
+Each experiment records hypothesis -> change -> before/after roofline terms
+into experiments/perf/<cell>.json; EXPERIMENTS.md §Perf narrates them.
+
+Cells (selection rationale in EXPERIMENTS.md §Perf):
+  1. acorn/serve_25m      — paper-representative (the hybrid-search serving
+                            step itself); memory-bound baseline.
+  2. smollm-360m/train_4k — worst roofline fraction of the whole table
+                            (useful-flops ratio ~0.004).
+  3. dcn-v2/retrieval_cand — most collective-skewed cell (Tx/Tm ~ 11x).
+
+Usage: PYTHONPATH=src python -m repro.launch.perf [--cell 1|2|3|all]
+"""
+import argparse
+import inspect
+import json
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.distributed.sharding import named
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+
+OUT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "..", "experiments", "perf"))
+
+
+def lower_and_analyze(step, abstract, in_specs, mesh, model_flops=None):
+    t0 = time.perf_counter()
+    compiled = jax.jit(step, in_shardings=named(mesh, in_specs)).lower(
+        *abstract).compile()
+    roof = analyze(compiled, model_flops=model_flops)
+    return roof, time.perf_counter() - t0
+
+
+def record(cell: str, entries):
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, cell + ".json")
+    json.dump(entries, open(path, "w"), indent=1)
+    print(f"\n--- {cell} ---")
+    for e in entries:
+        r = e["roofline"]
+        print(f"{e['variant']:28s} Tc={r['t_compute']:.2e} "
+              f"Tm={r['t_memory']:.2e} Tx={r['t_collective']:.2e} "
+              f"-> {r['bottleneck']}")
+
+
+def cell_acorn():
+    mesh = make_production_mesh()
+    arch = get_arch("acorn")
+    abstract = arch.abstract_inputs(None, "serve_25m")
+    in_specs = arch.in_shardings(None, "serve_25m", mesh)
+    entries = []
+
+    def run(variant, hypothesis, **kw):
+        step = arch.step_fn(None, "serve_25m", mesh=mesh, **kw)
+        ab = abstract
+        if kw.get("bf16_corpus"):
+            pass
+        roof, secs = lower_and_analyze(step, ab, in_specs, mesh)
+        entries.append(dict(variant=variant, hypothesis=hypothesis,
+                            roofline=roof.to_dict(mesh.devices.size),
+                            compile_s=round(secs, 1)))
+
+    run("baseline (materialized scores)",
+        "full (B, n_local) f32 score matrix costs 3-4 HBM passes on top of "
+        "the corpus read -> memory-bound")
+    run("opt1: chunked running top-k",
+        "scanning corpus chunks with a running top-k keeps scores in a "
+        "chunk-sized working set; HBM traffic drops to ~corpus+masks "
+        "(predicted Tm ~/4)", optimized=True)
+
+    # opt2: bf16 corpus — halves the dominant corpus read
+    import jax.numpy as jnp
+    S = jax.ShapeDtypeStruct
+    n, d, b = 3 << 23, 512, 512
+    ab_bf16 = (S((n, d), jnp.bfloat16), S((b, d), jnp.float32),
+               S((b, n), jnp.bool_))
+    step = arch.step_fn(None, "serve_25m", mesh=mesh, optimized=True)
+    roof, secs = lower_and_analyze(step, ab_bf16, in_specs, mesh)
+    entries.append(dict(
+        variant="opt2: chunked + bf16 corpus",
+        hypothesis="corpus read dominates after opt1; bf16 halves it "
+                   "(predicted Tm ~/2 again; ranking precision validated "
+                   "in tests)", roofline=roof.to_dict(mesh.devices.size),
+        compile_s=round(secs, 1)))
+
+    # modeled entry: the Pallas filtered_topk kernel keeps score tiles in
+    # VMEM, so HBM traffic is exactly corpus + masks + (tiny) per-tile
+    # top-k outputs — analytic from the kernel's BlockSpecs (the kernel is
+    # validated in interpret mode; XLA-level scans cannot express this
+    # fusion, which is the finding of iterations 1-2)
+    chips = mesh.devices.size
+    nrows, dd, bq, kk = 3 << 23, 512, 512, 10
+    for name, vec_bytes in [("pallas filtered_topk (modeled, f32)", 4),
+                            ("pallas filtered_topk (modeled, bf16)", 2)]:
+        corpus = nrows * dd * vec_bytes / chips
+        masks_b = bq * nrows * 1 / chips
+        outs = bq * (nrows // 512 // 512) * kk * 8
+        t_m = (corpus + masks_b + outs) / 819e9
+        entries.append(dict(
+            variant=name,
+            hypothesis="VMEM-resident score tiles: HBM traffic = corpus + "
+                       "masks + per-tile top-k only (analytic; kernel "
+                       "correctness in tests/test_kernels.py)",
+            roofline=dict(flops_per_chip=None,
+                          bytes_per_chip=corpus + masks_b + outs,
+                          collective_bytes_per_chip=1.1e7 / 2,
+                          t_compute=2.62e-04, t_memory=t_m,
+                          t_collective=2.23e-04,
+                          bottleneck="memory" if t_m > 2.62e-4 else "compute",
+                          model_flops=None, useful_flops_ratio=None,
+                          collectives={}, modeled=True)))
+    record("acorn__serve_25m", entries)
+
+
+def cell_smollm():
+    mesh = make_production_mesh()
+    arch = get_arch("smollm-360m")
+    cfg = arch.config()
+    step = arch.step_fn(cfg, "train_4k")
+    abstract = arch.abstract_inputs(cfg, "train_4k")
+    from repro.configs.lm_common import LM_SHAPES, model_flops
+    mf = model_flops(cfg, 256 * 4096, train=True)
+    entries = []
+    for layout, hypothesis in [
+        ("baseline",
+         "FSDP+TP layout: 15 heads don't divide the model axis, so "
+         "attention runs replicated 16x per data shard — f32 score "
+         "traffic dominates (Tm huge, useful-ratio ~0)"),
+        ("pure_dp",
+         "360M params fit replicated; batch over all 256 chips makes "
+         "attention per-chip B=1 (16x less score traffic) at the cost of "
+         "a full-size gradient all-reduce (predicted: Tm /16, Tx ~same "
+         "order, useful-ratio ~x16)"),
+    ]:
+        in_specs = arch.in_shardings(cfg, "train_4k", mesh, layout=layout)
+        roof, secs = lower_and_analyze(step, abstract, in_specs, mesh,
+                                       model_flops=mf)
+        entries.append(dict(variant=layout, hypothesis=hypothesis,
+                            roofline=roof.to_dict(mesh.devices.size),
+                            compile_s=round(secs, 1)))
+
+    # iteration 2: after pure_dp the (B,S,V) f32 logits/softmax chain
+    # dominates Tm; keeping logits bf16 lets the f32 upcast fuse into the
+    # loss reductions -> predicted ~2x less logits traffic
+    import dataclasses as dc
+    cfg2 = dc.replace(cfg, logits_f32=False)
+    step2 = arch.step_fn(cfg2, "train_4k")
+    in_specs = arch.in_shardings(cfg2, "train_4k", mesh, layout="pure_dp")
+    roof, secs = lower_and_analyze(step2, abstract, in_specs, mesh,
+                                   model_flops=mf)
+    entries.append(dict(
+        variant="pure_dp + bf16 logits",
+        hypothesis="post-reshard Tm is dominated by the (256/256,4096,49152) "
+                   "f32 logits tensor and its softmax chain; bf16 logits "
+                   "halve it (predicted Tm ~/1.6)",
+        roofline=roof.to_dict(mesh.devices.size), compile_s=round(secs, 1)))
+    record("smollm-360m__train_4k", entries)
+
+
+def cell_dcn():
+    mesh = make_production_mesh()
+    arch = get_arch("dcn-v2")
+    cfg = arch.config()
+    abstract = arch.abstract_inputs(cfg, "retrieval_cand")
+    in_specs = arch.in_shardings(cfg, "retrieval_cand", mesh)
+    entries = []
+    for optimized, variant, hypothesis in [
+        (False, "baseline (broadcast ids)",
+         "broadcasting the user's 26 sparse ids to 1M rows makes XLA "
+         "all-gather every row-sharded table (~1.3 GB/chip)"),
+        (True, "opt: hoist constant user features",
+         "25 of 26 features are candidate-independent: look them up once "
+         "at B=1 and broadcast 16-dim embeddings; only the candidate "
+         "column's table is touched (predicted Tx /10+)"),
+    ]:
+        step = arch.step_fn(cfg, "retrieval_cand", optimized=optimized)
+        roof, secs = lower_and_analyze(step, abstract, in_specs, mesh)
+        entries.append(dict(variant=variant, hypothesis=hypothesis,
+                            roofline=roof.to_dict(mesh.devices.size),
+                            compile_s=round(secs, 1)))
+    record("dcn-v2__retrieval_cand", entries)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    args = ap.parse_args()
+    cells = {"1": cell_acorn, "2": cell_smollm, "3": cell_dcn}
+    if args.cell == "all":
+        for fn in cells.values():
+            fn()
+    else:
+        cells[args.cell]()
+
+
+if __name__ == "__main__":
+    main()

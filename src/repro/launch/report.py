@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt(x, digits=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def load(dirpath: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_table(recs, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | Tc (s) | Tm (s) | Tx (s) | bottleneck | "
+        "MODEL_FLOPS | useful ratio | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                         f"| - | SKIP: {r['reason'][:60]} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                         f"| - | FAILED |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['t_compute'])} | "
+            f"{fmt(rf['t_memory'])} | {fmt(rf['t_collective'])} | "
+            f"**{rf['bottleneck']}** | {fmt(rf.get('model_flops'))} | "
+            f"{'-' if ratio is None else f'{ratio:.2f}'} | |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(recs) -> str:
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skipped")
+    fail = sum(1 for r in recs if r.get("status") == "failed")
+    lines = [f"cells: {ok} compiled OK, {sk} skipped (documented), "
+             f"{fail} failed", ""]
+    for mesh in ["16x16", "2x16x16"]:
+        sub = [r for r in recs if r.get("mesh") == mesh
+               and r.get("status") == "ok"]
+        if not sub:
+            continue
+        worst = max(sub, key=lambda r: r["roofline"]["t_bound"]
+                    if "t_bound" in r["roofline"] else
+                    max(r["roofline"]["t_compute"], r["roofline"]["t_memory"],
+                        r["roofline"]["t_collective"]))
+        coll = [r for r in sub
+                if r["roofline"]["bottleneck"] == "collective"]
+        lines.append(f"mesh {mesh}: {len(sub)} cells | "
+                     f"{len(coll)} collective-bound")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(dryrun_summary(recs))
+    print()
+    print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (§Roofline):
+
+  compute    = HLO_FLOPs   / (chips × peak_FLOP/s)
+  memory     = HLO_bytes   / (chips × HBM_bw)
+  collective = coll_bytes  / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (XLA reports
+the post-SPMD per-partition program, i.e. per-chip numbers — verified by
+tests/test_dryrun_smoke.py); collective bytes are parsed from the compiled
+HLO text (cost_analysis does not count them).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment-provided).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]{1,0}' -> bytes.  Tuple shapes: sum of parts."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum collective op bytes by type from (post-SPMD) HLO text.
+
+    For each collective instruction we take the *output* shape bytes
+    (all-gather: full gathered size; all-reduce: reduced tensor;
+    reduce-scatter: scattered output — we use max(in,out) as wire-bytes
+    proxy, which upper-bounds a ring implementation's per-chip traffic
+    within 2x).
+    """
+    out: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "bytes": 0.0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        out_bytes = _shape_bytes(m.group(1))
+        # operand shapes appear in the argument list
+        argpart = ls[m.end():]
+        in_bytes = _shape_bytes(argpart.split("metadata=")[0]
+                                if "metadata=" in argpart else argpart)
+        out[base]["count"] += 1
+        out[base]["bytes"] += float(max(out_bytes, in_bytes))
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float              # per chip
+    bytes_accessed: float     # per chip
+    collective_bytes: float   # per chip
+    collectives: Dict = field(default_factory=dict)
+    model_flops: Optional[float] = None  # 6·N·D global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def useful_flops_ratio(self, chips: int) -> Optional[float]:
+        """MODEL_FLOPS / (HLO_FLOPs·chips): how much compiled compute is
+        'useful' — catches remat/redundancy waste."""
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / (self.flops * chips)
+
+    def to_dict(self, chips: int) -> Dict:
+        return dict(
+            flops_per_chip=self.flops,
+            bytes_per_chip=self.bytes_accessed,
+            collective_bytes_per_chip=self.collective_bytes,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            model_flops=self.model_flops,
+            useful_flops_ratio=self.useful_flops_ratio(chips),
+            collectives=self.collectives,
+        )
+
+
+def analyze(compiled, model_flops: Optional[float] = None) -> Roofline:
+    """Loop-aware analysis of the compiled (post-SPMD, per-chip) HLO.
+
+    Uses launch.hlo_cost (multiplies while-bodies by their known trip
+    counts — XLA's own cost_analysis counts loop bodies once, which
+    under-reports every scan-over-layers model; see tests/test_hlo_cost)."""
+    from .hlo_cost import analyze_hlo
+    cost = analyze_hlo(compiled.as_text())
+    return Roofline(flops=cost.flops, bytes_accessed=cost.bytes,
+                    collective_bytes=cost.coll_bytes, collectives=cost.coll,
+                    model_flops=model_flops)

@@ -1,0 +1,97 @@
+"""Training launcher CLI.
+
+Runs the fault-tolerant loop for any assigned architecture at its reduced
+(host-scale) config — the full configs are exercised via the dry-run.
+
+  PYTHONPATH=src python -m repro.launch.train --arch sasrec --steps 200 \
+      --ckpt-dir /tmp/ck [--resume]
+
+On a pod this binary is what every host runs (jax.distributed.initialize +
+the production mesh replace make_host_mesh; the loop, checkpointing and
+data skipping are already multi-host-shaped).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.train.loop import TrainConfig, run
+from repro.train.optimizer import AdamWConfig
+
+
+def _train_shape(arch) -> str:
+    for c in arch.cells():
+        if c.kind == "train":
+            return c.shape
+    raise ValueError("arch has no train cell")
+
+
+def make_data_iter(arch, cfg, shape, seed=0):
+    """Random-but-deterministic batches matching the arch's train inputs."""
+    _, _, batch_struct = arch.abstract_inputs(cfg, shape, reduced=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_struct)
+    rng = np.random.default_rng(seed)
+    while True:
+        leaves = []
+        for path, leaf in flat:
+            name = "/".join(str(getattr(p, "key", p)) for p in path)
+            if jnp.issubdtype(leaf.dtype, jnp.integer):
+                leaves.append(jnp.asarray(
+                    rng.integers(0, 4, leaf.shape), leaf.dtype))
+            elif "adj" in name:
+                leaves.append(jnp.asarray(
+                    (rng.random(leaf.shape) < 0.3), leaf.dtype))
+            elif "mask" in name:
+                leaves.append(jnp.ones(leaf.shape, leaf.dtype))
+            elif leaf.dtype == jnp.bool_:
+                leaves.append(jnp.ones(leaf.shape, jnp.bool_))
+            else:
+                leaves.append(jnp.asarray(
+                    rng.normal(size=leaf.shape), leaf.dtype))
+        yield jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    shape = _train_shape(arch)
+    cfg = arch.config(reduced=True, shape=shape)
+    params = arch.init(cfg, jax.random.PRNGKey(0))
+    step = arch.step_fn(cfg, shape, *([] if arch.family != "gnn" else []))
+
+    # adapt the arch's (params, opt, batch) step into the loop's loss_fn
+    # contract by reusing the underlying loss via a probe step
+    def loss_fn(p, batch):
+        from repro.train.optimizer import init_adamw
+        _, _, loss = step(p, init_adamw(p), batch)
+        return loss
+
+    # the arch step already applies its optimizer; for the CLI we drive the
+    # loop's own AdamW over the raw loss instead (single source of truth)
+    data = make_data_iter(arch, cfg, shape)
+    res = run(loss_fn, params, data,
+              TrainConfig(total_steps=args.steps,
+                          ckpt_every=args.ckpt_every, log_every=10,
+                          microbatches=args.microbatches,
+                          ckpt_dir=args.ckpt_dir),
+              AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps))
+    print(f"{args.arch}/{shape}: {res['steps']} steps in "
+          f"{res['seconds']:.1f}s; loss {res['losses'][0][1]:.4f} -> "
+          f"{res['losses'][-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""PNA — Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+Message passing is built on the JAX-native primitives the taxonomy
+prescribes (jax.ops.segment_sum / segment_max over an edge index); the fused
+4-aggregator Pallas kernel covers the dense-batched (molecule) regime.
+
+Graph regimes (one per assigned shape):
+  full_graph   — whole-graph edge list, train on all labeled nodes
+  minibatch    — fanout-sampled blocks from a real neighbor sampler
+  batched_dense— padded small graphs (B, N, N) through the Pallas kernel
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pna_aggregate.ops import (pna_aggregate,
+                                             pna_aggregate_segment)
+from .common import cross_entropy, dense_init
+
+Array = jax.Array
+
+N_AGG = 4      # mean / max / min / std
+N_SCALE = 3    # identity / amplification / attenuation
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_in: int = 1433
+    d_hidden: int = 75
+    n_classes: int = 40
+    avg_log_degree: float = 2.0   # delta: E[log(deg+1)] over training graph
+    dtype: Any = jnp.float32
+
+
+def init_pna(cfg: PNAConfig, key: Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, 2 + 2 * cfg.n_layers)
+    p: Dict[str, Any] = {
+        "enc": dense_init(keys[0], cfg.d_in, cfg.d_hidden, cfg.dtype),
+        "dec": dense_init(keys[1], cfg.d_hidden, cfg.n_classes, cfg.dtype),
+        "layers": [],
+    }
+    d_cat = cfg.d_hidden * (1 + N_AGG * N_SCALE)
+    for i in range(cfg.n_layers):
+        p["layers"].append({
+            "w_msg": dense_init(keys[2 + 2 * i], cfg.d_hidden, cfg.d_hidden,
+                                cfg.dtype),
+            "w_upd": dense_init(keys[3 + 2 * i], d_cat, cfg.d_hidden,
+                                cfg.dtype),
+        })
+    return p
+
+
+def _scale(agg: Array, deg: Array, delta: float) -> Array:
+    """Apply PNA's degree scalers to (N, 4F) -> (N, 12F)."""
+    logd = jnp.log(deg + 1.0)[:, None]
+    amp = logd / delta
+    att = delta / jnp.maximum(logd, 1e-6)
+    att = jnp.where(deg[:, None] > 0, att, 0.0)
+    return jnp.concatenate([agg, agg * amp, agg * att], axis=-1)
+
+
+def pna_layer_sparse(lp, h, src, dst, n_nodes, delta):
+    msgs = h[src] @ lp["w_msg"]
+    agg = pna_aggregate_segment(msgs, dst, n_nodes)        # (N, 4F)
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, h.dtype), dst, n_nodes)
+    z = jnp.concatenate([h, _scale(agg, deg, delta)], axis=-1)
+    return jax.nn.relu(z @ lp["w_upd"])
+
+
+def forward_sparse(cfg: PNAConfig, params, feats, src, dst):
+    """feats (N, d_in), edge list src->dst (E,) -> logits (N, C)."""
+    n = feats.shape[0]
+    h = jax.nn.relu(feats @ params["enc"])
+    for lp in params["layers"]:
+        h = pna_layer_sparse(lp, h, src, dst, n, cfg.avg_log_degree)
+    return h @ params["dec"]
+
+
+def loss_sparse(cfg, params, feats, src, dst, labels, label_mask):
+    logits = forward_sparse(cfg, params, feats, src, dst)
+    return cross_entropy(logits, labels, label_mask)
+
+
+# ---------------------------------------------------------------------------
+# dense-batched (molecule) regime — Pallas kernel path
+# ---------------------------------------------------------------------------
+
+
+def forward_dense(cfg: PNAConfig, params, feats, adj, use_kernel=True):
+    """feats (B, N, d_in), adj (B, N, N) -> graph logits (B, C) (mean pool)."""
+    h = jax.nn.relu(feats @ params["enc"])
+    deg = adj.sum(-1)
+    for lp in params["layers"]:
+        msgs = h @ lp["w_msg"]
+        agg = pna_aggregate(adj, msgs, use_kernel=use_kernel)   # (B,N,4F)
+        scaled = jax.vmap(lambda a, d: _scale(a, d, cfg.avg_log_degree))(
+            agg, deg)
+        z = jnp.concatenate([h, scaled], axis=-1)
+        h = jax.nn.relu(z @ lp["w_upd"])
+    pooled = h.mean(axis=1)
+    return pooled @ params["dec"]
+
+
+def loss_dense(cfg, params, feats, adj, labels, use_kernel=True):
+    logits = forward_dense(cfg, params, feats, adj, use_kernel=use_kernel)
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# neighbor sampler (minibatch_lg needs a real one)
+# ---------------------------------------------------------------------------
+
+
+def build_csr(n_nodes: int, src: np.ndarray, dst: np.ndarray):
+    """Incoming-edge CSR: for each node, the sources pointing at it."""
+    order = np.argsort(dst, kind="stable")
+    indices = src[order].astype(np.int32)
+    counts = np.bincount(dst, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, indices
+
+
+def sample_fanout(indptr, indices, seeds: np.ndarray, fanouts,
+                  rng: np.random.Generator):
+    """GraphSAGE-style layered fanout sampling (with replacement).
+
+    Returns per-hop blocks [(src, dst, n_dst_nodes)] in aggregation order
+    (deepest hop first) plus the full node set, where src/dst index into the
+    block-local node array.
+    """
+    layers = []
+    frontier = np.unique(seeds).astype(np.int32)
+    all_nodes = [frontier]
+    for f in fanouts:
+        deg = (indptr[frontier + 1] - indptr[frontier]).astype(np.int64)
+        has = deg > 0
+        # sample f incoming neighbors per frontier node
+        offs = rng.integers(0, np.maximum(deg, 1)[:, None],
+                            size=(len(frontier), f))
+        srcs = indices[np.minimum(indptr[frontier, None] + offs,
+                                  indptr[frontier + 1, None] - 1)]
+        srcs = np.where(has[:, None], srcs, frontier[:, None])  # self-loop
+        dsts = np.repeat(frontier, f)
+        layers.append((srcs.reshape(-1).astype(np.int32),
+                       dsts.astype(np.int32)))
+        frontier = np.unique(srcs.reshape(-1)).astype(np.int32)
+        all_nodes.append(frontier)
+    nodes = np.unique(np.concatenate(all_nodes)).astype(np.int32)
+    remap = np.full(int(nodes.max()) + 1, -1, np.int32)
+    remap[nodes] = np.arange(len(nodes), dtype=np.int32)
+    blocks = [(remap[s], remap[d]) for s, d in reversed(layers)]
+    return nodes, blocks, remap[np.unique(seeds).astype(np.int32)]
+
+
+def forward_minibatch(cfg: PNAConfig, params, feats_block, blocks,
+                      n_block_nodes):
+    """Forward over sampled blocks; returns logits for all block nodes
+    (caller selects seed rows)."""
+    h = jax.nn.relu(feats_block @ params["enc"])
+    for lp, (src, dst) in zip(params["layers"], blocks):
+        h = pna_layer_sparse(lp, h, src, dst, n_block_nodes,
+                             cfg.avg_log_degree)
+    return h @ params["dec"]

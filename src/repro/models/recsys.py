@@ -1,0 +1,352 @@
+"""RecSys architectures: DIEN, two-tower retrieval, SASRec, DCN-v2.
+
+All four sit on huge row-sharded embedding tables; lookups go through
+``repro.kernels.embedding_bag`` (single-device) or the Megatron-style
+mask-and-psum sharded lookup in distributed/embedding.py (model-parallel).
+Models take a ``lookup`` callable so the same code runs in both regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import bce_with_logits, cross_entropy, dense_init, embed_init
+
+Array = jax.Array
+
+
+def default_lookup(table: Array, ids: Array) -> Array:
+    """ids (...,) -> (..., D); -1 gives zeros."""
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where((ids >= 0)[..., None], out, 0.0)
+
+
+def _mlp_params(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [dense_init(ks[i], dims[i], dims[i + 1], dtype)
+              for i in range(len(dims) - 1)],
+        "b": [jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)],
+    }
+
+
+def _mlp(p, x, act=jax.nn.relu, final_act=False):
+    n = len(p["w"])
+    for i in range(n):
+        x = x @ p["w"][i] + p["b"][i]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ===========================================================================
+# DIEN (arXiv:1809.03672): GRU interest extractor + AUGRU interest evolution
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    n_items: int = 1_000_000
+    n_cates: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    dtype: Any = jnp.float32
+
+
+def _gru_params(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_in, 3 * d_h, dtype),
+        "wh": dense_init(k2, d_h, 3 * d_h, dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, a=None):
+    """Standard GRU cell; with a != None the update gate is scaled by the
+    attention score — the AUGRU of DIEN."""
+    gi = x @ p["wi"] + p["b"]
+    gh = h @ p["wh"]
+    i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
+    h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    if a is not None:
+        z = z * a[:, None]
+    return (1.0 - z) * h + z * n
+
+
+def init_dien(cfg: DIENConfig, key: Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d2 = 2 * cfg.embed_dim  # item + category per step
+    return {
+        "item_emb": embed_init(ks[0], cfg.n_items, cfg.embed_dim, cfg.dtype),
+        "cate_emb": embed_init(ks[1], cfg.n_cates, cfg.embed_dim, cfg.dtype),
+        "gru1": _gru_params(ks[2], d2, cfg.gru_dim, cfg.dtype),
+        "augru": _gru_params(ks[3], cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att_w": dense_init(ks[4], cfg.gru_dim, d2, cfg.dtype),
+        "mlp": _mlp_params(ks[5], (cfg.gru_dim + 3 * d2,) + cfg.mlp_dims
+                           + (1,), cfg.dtype),
+    }
+
+
+def dien_forward(cfg: DIENConfig, params, batch,
+                 lookup: Callable = default_lookup) -> Array:
+    """batch: hist_items/hist_cates (B,S), target_item/target_cate (B),
+    mask (B,S) -> logits (B,)."""
+    hi = lookup(params["item_emb"], batch["hist_items"])
+    hc = lookup(params["cate_emb"], batch["hist_cates"])
+    h_seq = jnp.concatenate([hi, hc], axis=-1)              # (B,S,2E)
+    ti = lookup(params["item_emb"], batch["target_item"])
+    tc = lookup(params["cate_emb"], batch["target_cate"])
+    tgt = jnp.concatenate([ti, tc], axis=-1)                # (B,2E)
+    mask = batch["mask"].astype(h_seq.dtype)                # (B,S)
+
+    b = h_seq.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), h_seq.dtype)
+
+    def step1(h, xs):
+        x, m = xs
+        h2 = _gru_cell(params["gru1"], h, x)
+        h = jnp.where(m[:, None] > 0, h2, h)
+        return h, h
+
+    _, interests = jax.lax.scan(step1, h0,
+                                (h_seq.swapaxes(0, 1), mask.swapaxes(0, 1)))
+    interests = interests.swapaxes(0, 1)                    # (B,S,G)
+
+    # attention of target on interests
+    att_logits = jnp.einsum("bsg,ge,be->bs", interests, params["att_w"], tgt)
+    att_logits = jnp.where(mask > 0, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=-1)               # (B,S)
+
+    def step2(h, xs):
+        x, a, m = xs
+        h2 = _gru_cell(params["augru"], h, x, a)
+        h = jnp.where(m[:, None] > 0, h2, h)
+        return h, None
+
+    h_final, _ = jax.lax.scan(
+        step2, h0, (interests.swapaxes(0, 1), att.swapaxes(0, 1),
+                    mask.swapaxes(0, 1)))
+
+    hist_sum = (h_seq * mask[..., None]).sum(1)
+    z = jnp.concatenate([h_final, tgt, hist_sum, tgt * hist_sum], axis=-1)
+    return _mlp(params["mlp"], z)[:, 0]
+
+
+def dien_loss(cfg, params, batch, lookup: Callable = default_lookup):
+    return bce_with_logits(dien_forward(cfg, params, batch, lookup),
+                           batch["label"])
+
+
+# ===========================================================================
+# Two-tower retrieval (YouTube/RecSys'19): sampled softmax + logQ correction
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_users: int = 5_000_000
+    n_items: int = 2_000_000
+    n_user_feats: int = 4           # multi-hot user context features
+    embed_dim: int = 256
+    tower_dims: Tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+
+def init_two_tower(cfg: TwoTowerConfig, key: Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    e = cfg.embed_dim
+    return {
+        "user_emb": embed_init(ks[0], cfg.n_users, e, cfg.dtype),
+        "item_emb": embed_init(ks[1], cfg.n_items, e, cfg.dtype),
+        "user_tower": _mlp_params(ks[2], (e * (1 + cfg.n_user_feats),)
+                                  + cfg.tower_dims, cfg.dtype),
+        "item_tower": _mlp_params(ks[3], (e,) + cfg.tower_dims, cfg.dtype),
+    }
+
+
+def user_embed(cfg, params, batch, lookup: Callable = default_lookup):
+    u = lookup(params["user_emb"], batch["user_id"])            # (B,E)
+    f = lookup(params["user_emb"], batch["user_feats"])         # (B,F,E)
+    z = jnp.concatenate([u, f.reshape(u.shape[0], -1)], axis=-1)
+    z = _mlp(params["user_tower"], z, final_act=False)
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+
+
+def item_embed(cfg, params, item_ids, lookup: Callable = default_lookup):
+    i = lookup(params["item_emb"], item_ids)
+    z = _mlp(params["item_tower"], i, final_act=False)
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_loss(cfg, params, batch, lookup: Callable = default_lookup,
+                   temperature: float = 0.05):
+    """In-batch sampled softmax with logQ correction (batch['logq'])."""
+    u = user_embed(cfg, params, batch, lookup)                  # (B,E')
+    v = item_embed(cfg, params, batch["item_id"], lookup)       # (B,E')
+    logits = (u @ v.T) / temperature                            # (B,B)
+    logits = logits - batch["logq"][None, :]
+    labels = jnp.arange(u.shape[0])
+    return cross_entropy(logits, labels)
+
+
+def two_tower_score_candidates(cfg, params, batch, cand_item_embs):
+    """retrieval_cand: one query against a precomputed candidate matrix.
+
+    cand_item_embs (N, E'): the corpus the ACORN index is built over — this
+    is the hybrid-search integration point."""
+    u = user_embed(cfg, params, batch)
+    return u @ cand_item_embs.T                                 # (B, N)
+
+
+# ===========================================================================
+# SASRec (arXiv:1808.09781): self-attentive sequential recommendation
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dtype: Any = jnp.float32
+
+
+def init_sasrec(cfg: SASRecConfig, key: Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    e = cfg.embed_dim
+    p = {
+        "item_emb": embed_init(ks[0], cfg.n_items, e, cfg.dtype),
+        "pos_emb": embed_init(ks[1], cfg.seq_len, e, cfg.dtype),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        k = ks[2 + 6 * i: 8 + 6 * i]
+        p["blocks"].append({
+            "wq": dense_init(k[0], e, e, cfg.dtype),
+            "wk": dense_init(k[1], e, e, cfg.dtype),
+            "wv": dense_init(k[2], e, e, cfg.dtype),
+            "wo": dense_init(k[3], e, e, cfg.dtype),
+            "w1": dense_init(k[4], e, e, cfg.dtype),
+            "w2": dense_init(k[5], e, e, cfg.dtype),
+            "ln1": jnp.zeros((e,), cfg.dtype),
+            "ln2": jnp.zeros((e,), cfg.dtype),
+        })
+    return p
+
+
+def sasrec_forward(cfg: SASRecConfig, params, seq: Array,
+                   lookup: Callable = default_lookup) -> Array:
+    """seq (B,S) item ids (-1 pad) -> hidden states (B,S,E)."""
+    b, s = seq.shape
+    h = lookup(params["item_emb"], seq) * math.sqrt(cfg.embed_dim)
+    h = h + params["pos_emb"][None, :s]
+    pad = (seq >= 0)[:, None, None, :]                        # key mask
+    causal = (jnp.arange(s)[None, :] <= jnp.arange(s)[:, None])[None, None]
+    mask = causal & pad
+    for bp in params["blocks"]:
+        hn = _rms(h, bp["ln1"])
+        q, k, v = hn @ bp["wq"], hn @ bp["wk"], hn @ bp["wv"]
+        att = jnp.einsum("bqe,bke->bqk", q, k)[:, None] / math.sqrt(
+            cfg.embed_dim)
+        att = jnp.where(mask, att, -1e30)
+        a = jax.nn.softmax(att, axis=-1)[:, 0]
+        h = h + (jnp.einsum("bqk,bke->bqe", a, v) @ bp["wo"])
+        hn = _rms(h, bp["ln2"])
+        h = h + jax.nn.relu(hn @ bp["w1"]) @ bp["w2"]
+    return h
+
+
+def _rms(x, w, eps=1e-6):
+    nrm = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * nrm * (1.0 + w)
+
+
+def sasrec_loss(cfg, params, batch, lookup: Callable = default_lookup,
+                n_negatives: int = 128):
+    """Next-item prediction with sampled negatives (paper's BCE form)."""
+    seq, pos, neg = batch["seq"], batch["pos"], batch["neg"]  # (B,S),(B,S),(B,S,Nneg)
+    h = sasrec_forward(cfg, params, seq, lookup)
+    pe = lookup(params["item_emb"], pos)                       # (B,S,E)
+    ne = lookup(params["item_emb"], neg)                       # (B,S,N,E)
+    pos_logit = jnp.sum(h * pe, -1)                            # (B,S)
+    neg_logit = jnp.einsum("bse,bsne->bsn", h, ne)
+    m = (pos >= 0).astype(jnp.float32)
+    lp = jax.nn.log_sigmoid(pos_logit) * m
+    ln = jnp.sum(jax.nn.log_sigmoid(-neg_logit), -1) * m
+    return -(lp + ln).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+# ===========================================================================
+# DCN-v2 (arXiv:2008.13535): cross network v2 + deep tower
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab_sizes: Tuple[int, ...] = tuple([1_000_000] * 20 + [10_000_000] * 6)
+    embed_dim: int = 16
+    n_cross: int = 3
+    mlp_dims: Tuple[int, ...] = (1024, 1024, 512)
+    dtype: Any = jnp.float32
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def init_dcnv2(cfg: DCNv2Config, key: Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2 + cfg.n_sparse + cfg.n_cross)
+    d0 = cfg.d_input
+    p = {
+        "tables": [embed_init(ks[i], v, cfg.embed_dim, cfg.dtype)
+                   for i, v in enumerate(cfg.vocab_sizes)],
+        "cross": [],
+        "mlp": _mlp_params(ks[cfg.n_sparse], (d0,) + cfg.mlp_dims, cfg.dtype),
+        "head": dense_init(ks[cfg.n_sparse + 1],
+                           cfg.mlp_dims[-1] + d0, 1, cfg.dtype),
+    }
+    for i in range(cfg.n_cross):
+        p["cross"].append({
+            "w": dense_init(ks[2 + cfg.n_sparse + i - 1], d0, d0, cfg.dtype,
+                            scale=0.01),
+            "b": jnp.zeros((d0,), cfg.dtype),
+        })
+    return p
+
+
+def dcnv2_forward(cfg: DCNv2Config, params, batch,
+                  lookup: Callable = default_lookup) -> Array:
+    """batch: dense (B, 13) f32, sparse (B, 26) int32 -> logits (B,)."""
+    embs = [lookup(params["tables"][i], batch["sparse"][:, i])
+            for i in range(cfg.n_sparse)]
+    x0 = jnp.concatenate([batch["dense"]] + embs, axis=-1)     # (B, d0)
+    x = x0
+    for cp in params["cross"]:
+        x = x0 * (x @ cp["w"] + cp["b"]) + x                    # DCN-v2 cross
+    deep = _mlp(params["mlp"], x0, final_act=True)
+    z = jnp.concatenate([x, deep], axis=-1)
+    return (z @ params["head"])[:, 0]
+
+
+def dcnv2_loss(cfg, params, batch, lookup: Callable = default_lookup):
+    return bce_with_logits(dcnv2_forward(cfg, params, batch, lookup),
+                           batch["label"])

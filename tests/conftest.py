@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# strictly scoped to launch/dryrun.py per the multi-pod dry-run contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,162 @@
+"""Checkpoint manager + training loop: roundtrip, atomicity, retention,
+async save, restart-resume determinism, NaN circuit breaker."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.train.loop import TrainConfig, run
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_adamw,
+                                   schedule)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(4.0)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(10, t, extra={"note": "x"})
+    restored, step = mgr.restore(t)
+    assert step == 10
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert mgr.manifest(10)["extra"]["note"] == "x"
+
+
+def test_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_missing_key_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        mgr.restore({"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_adamw(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(cfg, g, state, params)
+    assert float(loss(params)) < 1.0
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(schedule(cfg, jnp.asarray(100))) <= 0.1 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# training loop: run, checkpoint, resume
+# ---------------------------------------------------------------------------
+
+
+def _data_iter(seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(4,)).astype(np.float32)
+    while True:
+        x = rng.normal(size=(32, 4)).astype(np.float32)
+        y = x @ w_true + 0.01 * rng.normal(size=32).astype(np.float32)
+        yield {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def test_loop_learns_and_checkpoints(tmp_path):
+    params = {"w": jnp.zeros(4)}
+    res = run(_loss, params, _data_iter(), TrainConfig(
+        total_steps=60, ckpt_every=20, log_every=5,
+        ckpt_dir=str(tmp_path), async_ckpt=False),
+        AdamWConfig(lr=0.05, warmup_steps=0, total_steps=60,
+                    weight_decay=0.0))
+    losses = dict(res["losses"])
+    assert losses[55] < losses[0] * 0.2
+    assert CheckpointManager(str(tmp_path)).latest_step() == 60
+
+
+def test_loop_resume_matches_uninterrupted(tmp_path):
+    opt = AdamWConfig(lr=0.05, warmup_steps=0, total_steps=40,
+                      weight_decay=0.0)
+    # uninterrupted run
+    res_full = run(_loss, {"w": jnp.zeros(4)}, _data_iter(),
+                   TrainConfig(total_steps=40, ckpt_every=100,
+                               log_every=1, ckpt_dir=None), opt)
+    # interrupted at 20 + resumed (fresh process simulated by a new call)
+    d = str(tmp_path)
+    run(_loss, {"w": jnp.zeros(4)}, _data_iter(),
+        TrainConfig(total_steps=20, ckpt_every=20, log_every=1,
+                    ckpt_dir=d, async_ckpt=False), opt)
+    res_resumed = run(_loss, {"w": jnp.zeros(4)}, _data_iter(),
+                      TrainConfig(total_steps=40, ckpt_every=20,
+                                  log_every=1, ckpt_dir=d,
+                                  async_ckpt=False), opt)
+    np.testing.assert_allclose(np.asarray(res_full["params"]["w"]),
+                               np.asarray(res_resumed["params"]["w"]),
+                               rtol=1e-5)
+
+
+def test_loop_nan_circuit_breaker():
+    def bad_loss(params, batch):
+        return jnp.log(-jnp.sum(params["w"] ** 2) - 1.0)  # always nan
+
+    with pytest.raises(FloatingPointError):
+        run(bad_loss, {"w": jnp.ones(4)}, _data_iter(),
+            TrainConfig(total_steps=5, log_every=1, ckpt_dir=None),
+            AdamWConfig())
+
+
+def test_grad_accumulation_matches_full_batch():
+    from repro.train.loop import make_train_step
+    opt = AdamWConfig(lr=0.01, warmup_steps=0, weight_decay=0.0)
+    params = {"w": jnp.ones(4)}
+    batch = next(_data_iter())
+    s1 = make_train_step(_loss, opt, microbatches=1)
+    s4 = make_train_step(_loss, opt, microbatches=4)
+    p1, _, l1 = s1(params, init_adamw(params), batch)
+    p4, _, l4 = s4(params, init_adamw(params), batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               atol=1e-5)

@@ -1,0 +1,265 @@
+"""ACORN core: build + search behaviour, invariants, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AcornConfig, HybridIndex, OraclePartitionIndex,
+                        ann_search, build_acorn_1, build_acorn_gamma,
+                        build_hnsw, ground_truth, hybrid_search, masked_topk,
+                        postfilter_search, prefilter_search, recall_at_k)
+from repro.core.graph import INVALID
+from repro.core.search import dedup_mask, first_m_true
+from repro.data import make_lcps_dataset, make_workload
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_lcps_dataset(n=3000, d=12, card=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl(ds):
+    return make_workload(ds, kind="equals", n_queries=16, k=10, seed=1,
+                         card=8)
+
+
+@pytest.fixture(scope="module")
+def acorn_graph(ds):
+    return build_acorn_gamma(ds.x, KEY, M=8, gamma=8, m_beta=16)
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape helpers
+# ---------------------------------------------------------------------------
+
+
+def test_first_m_true_packs_in_order():
+    ids = jnp.asarray([5, 9, 2, 7, 1], jnp.int32)
+    ok = jnp.asarray([True, False, True, True, False])
+    out = np.asarray(first_m_true(ids, ok, 2))
+    np.testing.assert_array_equal(out, [5, 2])
+
+
+def test_first_m_true_pads():
+    ids = jnp.asarray([5, 9], jnp.int32)
+    out = np.asarray(first_m_true(ids, jnp.asarray([False, True]), 4))
+    np.testing.assert_array_equal(out, [9, -1, -1, -1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-1, 20), min_size=1, max_size=40))
+def test_dedup_mask_property(ids):
+    arr = jnp.asarray(ids, jnp.int32)
+    mask = np.asarray(dedup_mask(arr))
+    seen = set()
+    for i, v in enumerate(ids):
+        want = v >= 0 and v not in seen
+        if v >= 0:
+            seen.add(v)
+        assert mask[i] == want
+
+
+# ---------------------------------------------------------------------------
+# brute force oracle
+# ---------------------------------------------------------------------------
+
+
+def test_masked_topk_matches_numpy(rng):
+    x = rng.normal(size=(500, 8)).astype(np.float32)
+    q = rng.normal(size=(7, 8)).astype(np.float32)
+    mask = rng.random((7, 500)) < 0.3
+    ids, dists = masked_topk(jnp.asarray(q), jnp.asarray(x),
+                             jnp.asarray(mask), 5)
+    d2 = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    d2[~mask] = np.inf
+    want = np.argsort(d2, axis=1)[:, :5]
+    np.testing.assert_array_equal(np.asarray(ids), want)
+
+
+def test_masked_topk_fewer_than_k():
+    x = jnp.asarray(np.eye(4, 3, dtype=np.float32))
+    q = x[:1]
+    mask = jnp.asarray([[True, False, False, False]])
+    ids, _ = masked_topk(q, x, mask, 3)
+    assert np.asarray(ids)[0, 0] == 0
+    assert (np.asarray(ids)[0, 1:] == INVALID).all()
+
+
+def test_recall_at_k_exact():
+    gt = jnp.asarray([[1, 2, 3, -1]])
+    r = jnp.asarray([[3, 1, 9, 9]])
+    assert abs(recall_at_k(r, gt) - 2 / 3) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# graph construction invariants
+# ---------------------------------------------------------------------------
+
+
+def test_levels_exponential(ds):
+    g = build_acorn_gamma(ds.x, KEY, M=8, gamma=4, m_beta=16)
+    lv = np.asarray(g.levels)
+    # ~ (1 - 1/M) of nodes at level 0 only
+    frac0 = (lv == 0).mean()
+    assert 0.7 < frac0 < 0.95
+    sizes = [int(n.shape[0]) for n in g.neighbors]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_neighbors_are_level_members(acorn_graph):
+    g = acorn_graph
+    for l in range(g.num_levels):
+        nb = np.asarray(g.neighbors[l])
+        members = set(np.asarray(g.node_ids[l]).tolist())
+        ids = nb[nb >= 0]
+        assert set(ids.tolist()) <= members
+
+
+def test_no_self_edges(acorn_graph):
+    g = acorn_graph
+    for l in range(g.num_levels):
+        nb = np.asarray(g.neighbors[l])
+        own = np.asarray(g.node_ids[l])[:, None]
+        assert not (nb == own).any()
+
+
+def test_compression_bounds_level0_degree(ds):
+    m, gamma, m_beta = 8, 8, 16
+    g = build_acorn_gamma(ds.x, KEY, M=m, gamma=gamma, m_beta=m_beta)
+    deg = np.asarray((g.neighbors[0] >= 0).sum(axis=1))
+    # stored degree stays O(m_beta + M), far below the M*gamma candidates
+    assert deg.max() <= m_beta + 2 * m + max(2, m // 2)
+    assert deg.mean() < m * gamma
+
+
+def test_two_hop_recovery_invariant(ds):
+    """Paper §5.2: every *coverage*-pruned candidate must be reachable as a
+    2-hop neighbor through some kept entry beyond M_beta.  With cap_out = K
+    no candidate is dropped by list truncation, so the invariant is exact."""
+    from repro.core.build import acorn_compress, knn_among
+    x = ds.x[:400]
+    K, m_beta = 32, 8
+    cand = knn_among(x, K)
+    out = acorn_compress(cand, m_beta, cap_total=K, cap_out=K,
+                         t_hop=m_beta, block=64)
+    cand_np, out_np = np.asarray(cand), np.asarray(out)
+    checked = 0
+    for v in range(64):
+        kept = [c for c in out_np[v] if c >= 0]
+        tail_kept = kept[m_beta:]
+        pruned = [c for c in cand_np[v] if c >= 0 and c not in kept]
+        for p in pruned:
+            checked += 1
+            assert any(p in out_np[t][:m_beta] for t in tail_kept), \
+                f"pruned {p} of node {v} not 2-hop recoverable"
+    assert checked > 0
+
+
+# ---------------------------------------------------------------------------
+# search behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_results_pass_predicate(ds, wl, acorn_graph):
+    masks = wl.masks(ds)
+    ids, dists, _ = hybrid_search(acorn_graph, ds.x, wl.xq, masks, k=10,
+                                  ef=48, variant="acorn-gamma", m=8,
+                                  m_beta=16)
+    ids = np.asarray(ids)
+    masks = np.asarray(masks)
+    for q in range(ids.shape[0]):
+        for i in ids[q]:
+            if i >= 0:
+                assert masks[q, i]
+
+
+def test_hybrid_dists_sorted_and_correct(ds, wl, acorn_graph):
+    ids, dists, _ = hybrid_search(acorn_graph, ds.x, wl.xq, wl.masks(ds),
+                                  k=10, ef=48, variant="acorn-gamma", m=8,
+                                  m_beta=16)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    x, xq = np.asarray(ds.x), np.asarray(wl.xq)
+    for q in range(ids.shape[0]):
+        valid = ids[q] >= 0
+        d = dists[q][valid]
+        assert (np.diff(d) >= -1e-5).all()
+        want = ((x[ids[q][valid]] - xq[q]) ** 2).sum(-1)
+        np.testing.assert_allclose(d, want, rtol=1e-4)
+
+
+def test_acorn_gamma_recall(ds, wl, acorn_graph):
+    ids, _, _ = hybrid_search(acorn_graph, ds.x, wl.xq, wl.masks(ds), k=10,
+                              ef=96, variant="acorn-gamma", m=8, m_beta=16)
+    assert recall_at_k(ids, wl.gt(ds)) > 0.85
+
+
+def test_acorn_1_recall(ds, wl):
+    g = build_acorn_1(ds.x, KEY, M=8)
+    ids, _, _ = hybrid_search(g, ds.x, wl.xq, wl.masks(ds), k=10, ef=96,
+                              variant="acorn-1", m=8, m_beta=8)
+    assert recall_at_k(ids, wl.gt(ds)) > 0.75
+
+
+def test_ann_search_recall(ds, wl):
+    g = build_hnsw(ds.x, KEY, M=8)
+    gt = ground_truth(wl.xq, ds.x, None, 10)
+    ids, _, _ = ann_search(g, ds.x, wl.xq, k=10, ef=96, m=8)
+    assert recall_at_k(ids, gt) > 0.9
+
+
+def test_prefilter_perfect_recall(ds, wl):
+    ids, _ = prefilter_search(wl.xq, ds.x, wl.masks(ds), 10)
+    assert recall_at_k(ids, wl.gt(ds)) == 1.0
+
+
+def test_postfilter_beats_naive(ds, wl):
+    g = build_hnsw(ds.x, KEY, M=8)
+    s = wl.avg_selectivity(ds)
+    ids, _ = postfilter_search(g, ds.x, wl.xq, wl.masks(ds), 10,
+                               selectivity=s, ef=64, m=8)
+    assert recall_at_k(ids, wl.gt(ds)) > 0.5
+
+
+def test_oracle_partition(ds, wl):
+    labels = np.asarray(ds.table.int_cols["label"])
+    masks = {v: labels == v for v in range(8)}
+    oidx = OraclePartitionIndex.build(ds.x, masks, KEY, M=8)
+    # search each query in its own partition
+    rec = []
+    for q, pred in enumerate(wl.predicates):
+        ids, _, _ = oidx.search(pred.value, wl.xq[q:q + 1], k=10, ef=64)
+        rec.append(recall_at_k(ids, wl.gt(ds)[q:q + 1]))
+    assert np.mean(rec) > 0.85
+
+
+def test_hybrid_index_routing(ds, wl):
+    cfg = AcornConfig(M=8, gamma=8, m_beta=16, ef_search=64)
+    idx = HybridIndex.build(ds.x, ds.table, cfg, seed=0)
+    ids, dists, info = idx.search(wl.xq, wl.predicates, k=10)
+    # selectivity 1/8 = 0.125 ~ s_min 1/8: routes should exist & be valid
+    assert set(info["routes"]) <= {"graph", "prefilter"}
+    assert recall_at_k(ids, wl.gt(ds)) > 0.8
+
+
+def test_hybrid_index_force_prefilter_exact(ds, wl):
+    cfg = AcornConfig(M=8, gamma=8, m_beta=16)
+    idx = HybridIndex.build(ds.x, ds.table, cfg, seed=0)
+    ids, _, info = idx.search(wl.xq, wl.predicates, k=10,
+                              force_route="prefilter")
+    assert (info["routes"] == "prefilter").all()
+    assert recall_at_k(ids, wl.gt(ds)) == 1.0
+
+
+def test_empty_predicate_returns_invalid(ds):
+    from repro.core.predicates import Equals
+    # a label value outside the domain -> nothing passes
+    preds = [Equals("label", 99)]
+    cfg = AcornConfig(M=8, gamma=8, m_beta=16)
+    idx = HybridIndex.build(ds.x, ds.table, cfg, seed=0)
+    xq = ds.x[:1]
+    ids, dists, _ = idx.search(xq, preds, k=5)
+    assert (np.asarray(ids) == INVALID).all()

@@ -1,0 +1,118 @@
+"""Distributed primitives, validated on an 8-device CPU mesh.
+
+jax fixes the device count at first init, so these run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the only other place
+that overrides device count is launch/dryrun.py, per the dry-run contract).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+# ---------------- sharded embedding lookup == plain take ----------------
+from repro.distributed.collectives import make_sharded_lookup
+lookup = make_sharded_lookup(mesh, dp="data", tp="model")
+rng = np.random.default_rng(0)
+table = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+ids = jnp.asarray(rng.integers(-1, 64, size=(8, 5)), jnp.int32)
+table_s = jax.device_put(table, NamedSharding(mesh, P("model", None)))
+ids_s = jax.device_put(ids, NamedSharding(mesh, P("data", None)))
+got = np.asarray(lookup(table_s, ids_s))
+want = np.where((np.asarray(ids) >= 0)[..., None],
+                np.asarray(table)[np.clip(np.asarray(ids), 0, 63)], 0.0)
+assert np.allclose(got, want, atol=1e-6), "sharded lookup mismatch"
+
+# ---------------- sharded topk == dense topk ----------------
+from repro.distributed.collectives import sharded_topk
+scores = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+idmat = jnp.broadcast_to(jnp.arange(32, dtype=jnp.int32)[None], (8, 32))
+f = sharded_topk(mesh, dp="data", tp="model")(4)
+scores_s = jax.device_put(scores, NamedSharding(mesh, P("data", "model")))
+ids_s = jax.device_put(idmat, NamedSharding(mesh, P("data", "model")))
+gids, gs = f(scores_s, ids_s)
+ws, wi = jax.lax.top_k(scores, 4)
+assert np.array_equal(np.asarray(gids), np.asarray(wi)), "sharded topk ids"
+assert np.allclose(np.asarray(gs), np.asarray(ws), atol=1e-6)
+
+# ---------------- split-KV decode attention == full softmax ----------------
+from repro.distributed.collectives import split_kv_decode_attention
+B, S, H, hd = 2, 32, 4, 8
+q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+valid = jnp.asarray(np.arange(S)[None, :] < 20).repeat(B, 0)
+attn = split_kv_decode_attention(mesh, seq_axis="data")
+ks = jax.device_put(k, NamedSharding(mesh, P(None, "data")))
+vs = jax.device_put(v, NamedSharding(mesh, P(None, "data")))
+vals = jax.device_put(valid, NamedSharding(mesh, P(None, "data")))
+got = np.asarray(attn(q, ks, vs, vals))
+s = np.einsum("bhd,bshd->bhs", np.asarray(q), np.asarray(k))
+s[~np.broadcast_to(np.asarray(valid)[:, None, :], s.shape)] = -np.inf
+p = np.exp(s - s.max(-1, keepdims=True))
+p /= p.sum(-1, keepdims=True)
+want = np.einsum("bhs,bshd->bhd", p, np.asarray(v))
+assert np.allclose(got, want, atol=1e-5), "split-kv attention mismatch"
+
+# ---------------- compressed psum: bounded error + EF improves ----------------
+from repro.distributed.collectives import compressed_psum
+import functools
+x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+
+def f(x):
+    out, err = compressed_psum(x, "data")
+    return out, err
+out, err = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
+                         out_specs=(P("data", None), P("data", None)),
+                         check_vma=False)(x)
+# per data-group mean over 4 shards
+xs = np.asarray(x).reshape(4, 2, 64)
+want = xs.mean(axis=0, keepdims=True).repeat(4, 0).reshape(8, 64)
+rel = np.abs(np.asarray(out) - want).max() / (np.abs(want).max() + 1e-9)
+assert rel < 0.05, f"int8 psum error too big: {rel}"
+assert np.abs(np.asarray(err)).max() < 0.05, "EF residual too big"
+
+# ---------------- two-tower filtered retrieval on mesh ----------------
+from repro.configs import get_arch
+arch = get_arch("two-tower-retrieval")
+cfg = arch.config(reduced=True)
+params = arch.init(cfg, jax.random.PRNGKey(0))
+step = arch.step_fn(cfg, "retrieval_cand", mesh=mesh)
+batch = {"user_id": jnp.asarray([3], jnp.int32),
+         "user_feats": jnp.asarray(rng.integers(0, 8, (1, 2)), jnp.int32),
+         "item_id": jnp.asarray([1], jnp.int32),
+         "logq": jnp.zeros((1,), jnp.float32)}
+cand = jnp.asarray(rng.normal(size=(256, cfg.tower_dims[-1])), jnp.float32)
+mask = jnp.asarray(rng.random((1, 256)) < 0.5)
+cand_s = jax.device_put(cand, NamedSharding(mesh, P(("data", "model"), None)))
+mask_s = jax.device_put(mask, NamedSharding(mesh, P(None, ("data", "model"))))
+ids, scores = step(params, batch, cand_s, mask_s)
+from repro.models.recsys import user_embed
+u = np.asarray(user_embed(cfg, params, batch))
+sc = u @ np.asarray(cand).T
+sc[~np.asarray(mask)] = -np.inf
+want_ids = np.argsort(-sc[0])[: ids.shape[1]]
+assert np.array_equal(np.asarray(ids)[0], want_ids), "mesh retrieval ids"
+
+print("DISTRIBUTED_OK")
+"""
+
+
+def test_distributed_primitives_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,73 @@
+"""§Perf optimized variants must be numerically faithful to their baselines."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+
+
+def test_dcn_retrieval_opt_matches_baseline():
+    arch = get_arch("dcn-v2")
+    cfg = arch.config(reduced=True)
+    params = arch.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"dense": jnp.asarray(rng.normal(size=(1, cfg.n_dense)),
+                                  jnp.float32),
+             "sparse": jnp.asarray(rng.integers(0, 64, (1, cfg.n_sparse)),
+                                   jnp.int32)}
+    cand = jnp.asarray(rng.integers(0, 64, 128), jnp.int32)
+    base = arch.step_fn(cfg, "retrieval_cand")(params, batch, cand)
+    opt = arch.step_fn(cfg, "retrieval_cand", optimized=True)(params, batch,
+                                                              cand)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), atol=1e-5)
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_arch
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+arch = get_arch("acorn")
+rng = np.random.default_rng(0)
+n, d, b = 4096, 32, 8
+x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+m = jnp.asarray(rng.random((b, n)) < 0.4)
+xs = jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None)))
+ms = jax.device_put(m, NamedSharding(mesh, P(None, ("data", "model"))))
+
+base = arch.step_fn(None, "serve_1m", mesh=mesh)
+opt = arch.step_fn(None, "serve_1m", mesh=mesh, optimized=True, chunk=256)
+ib, db = base(xs, q, ms)
+io, do = opt(xs, q, ms)
+assert np.array_equal(np.asarray(ib), np.asarray(io)), "opt ids differ"
+assert np.allclose(np.asarray(db), np.asarray(do), atol=1e-3), "opt dists"
+
+# bf16 corpus keeps ranking ~identical (recall@10 of bf16 vs f32 >= 0.9)
+xb = jax.device_put(x.astype(jnp.bfloat16),
+                    NamedSharding(mesh, P(("data", "model"), None)))
+i16, _ = opt(xb, q, ms)
+overlap = np.mean([len(set(a) & set(bb)) / 10.0
+                   for a, bb in zip(np.asarray(ib), np.asarray(i16))])
+assert overlap >= 0.9, f"bf16 ranking overlap {overlap}"
+print("PERF_VARIANTS_OK", overlap)
+"""
+
+
+def test_acorn_optimized_serve_matches_baseline_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "PERF_VARIANTS_OK" in r.stdout

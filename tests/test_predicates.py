@@ -1,0 +1,111 @@
+"""Predicate system: semantics + property tests (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import (And, AttributeTable, Between, ContainsAny,
+                                   Equals, Not, OneOf, Or, RegexMatch,
+                                   SelectivitySketch, TruePredicate, evaluate,
+                                   keywords_to_bitset, pack_multihot,
+                                   selectivity)
+
+
+def _table(n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    kw_lists = [list(rng.choice(16, size=rng.integers(0, 4), replace=False))
+                for _ in range(n)]
+    return AttributeTable(
+        int_cols={"label": jnp.asarray(rng.integers(0, 12, n).astype(np.int32)),
+                  "date": jnp.asarray(rng.integers(0, 100, n).astype(np.int32))},
+        bitset_cols={"kw": jnp.asarray(pack_multihot(kw_lists, 16))},
+        str_cols={"cap": np.asarray([f"item {i % 7} x" for i in range(n)],
+                                    dtype=object)},
+        n_keywords={"kw": 16},
+    ), kw_lists
+
+
+def test_equals_matches_numpy():
+    t, _ = _table()
+    got = np.asarray(evaluate(Equals("label", 3), t))
+    want = np.asarray(t.int_cols["label"]) == 3
+    np.testing.assert_array_equal(got, want)
+
+
+def test_between_inclusive():
+    t, _ = _table()
+    got = np.asarray(evaluate(Between("date", 10, 20), t))
+    col = np.asarray(t.int_cols["date"])
+    np.testing.assert_array_equal(got, (col >= 10) & (col <= 20))
+
+
+def test_contains_any_matches_lists():
+    t, kw_lists = _table()
+    got = np.asarray(evaluate(ContainsAny("kw", (3, 7)), t))
+    want = np.array([bool({3, 7} & set(l)) for l in kw_lists])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_regex_host_eval():
+    t, _ = _table()
+    got = np.asarray(evaluate(RegexMatch("cap", r"item [0-3] "), t))
+    assert got.sum() > 0
+    want = np.array([i % 7 <= 3 for i in range(t.n)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_boolean_combinators():
+    t, _ = _table()
+    a = evaluate(Equals("label", 1), t)
+    b = evaluate(Between("date", 0, 50), t)
+    np.testing.assert_array_equal(
+        np.asarray(evaluate(Equals("label", 1) & Between("date", 0, 50), t)),
+        np.asarray(a & b))
+    np.testing.assert_array_equal(
+        np.asarray(evaluate(Equals("label", 1) | Between("date", 0, 50), t)),
+        np.asarray(a | b))
+    np.testing.assert_array_equal(
+        np.asarray(evaluate(~Equals("label", 1), t)), ~np.asarray(a))
+
+
+@settings(max_examples=30, deadline=None)
+@given(v1=st.integers(0, 11), lo=st.integers(0, 99), w=st.integers(0, 40))
+def test_de_morgan_property(v1, lo, w):
+    t, _ = _table()
+    p, q = Equals("label", v1), Between("date", lo, lo + w)
+    lhs = np.asarray(evaluate(~(p | q), t))
+    rhs = np.asarray(evaluate(~p & ~q, t))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(kws=st.sets(st.integers(0, 15), min_size=1, max_size=5))
+def test_contains_any_is_union_of_singles(kws):
+    t, _ = _table()
+    combined = np.asarray(evaluate(ContainsAny("kw", tuple(kws)), t))
+    union = np.zeros(t.n, bool)
+    for k in kws:
+        union |= np.asarray(evaluate(ContainsAny("kw", (k,)), t))
+    np.testing.assert_array_equal(combined, union)
+
+
+def test_bitset_packing_roundtrip():
+    lists = [[0], [31], [32], [0, 31, 32, 63], []]
+    bits = pack_multihot(lists, 64)
+    for i, l in enumerate(lists):
+        for k in range(64):
+            want = k in l
+            got = bool(bits[i, k // 32] >> np.uint32(k % 32) & np.uint32(1))
+            assert got == want
+
+
+def test_selectivity_sketch_close_to_exact():
+    t, _ = _table(n=5000, seed=1)
+    sk = SelectivitySketch.build(t, sample_size=2000, seed=0)
+    p = Equals("label", 5)
+    assert abs(sk.estimate(p) - selectivity(p, t)) < 0.03
+
+
+def test_true_predicate():
+    t, _ = _table()
+    assert np.asarray(evaluate(TruePredicate(), t)).all()

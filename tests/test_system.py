@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests for the paper's system: dataset -> ACORN-γ
+index -> cost-routed hybrid serving -> recall, exercising the full public
+API in one flow (component depth lives in the sibling test modules)."""
+import numpy as np
+import pytest
+
+from repro.core import (AcornConfig, Between, ContainsAny, HybridIndex,
+                        TruePredicate, recall_at_k)
+from repro.data import make_hcps_dataset, make_workload
+
+
+@pytest.fixture(scope="module")
+def system():
+    ds = make_hcps_dataset(n=3000, d=24, seed=0)
+    idx = HybridIndex.build(ds.x, ds.table,
+                            AcornConfig(M=12, gamma=10, m_beta=24,
+                                        ef_search=96), seed=0)
+    return ds, idx
+
+
+def test_end_to_end_hybrid_search(system):
+    ds, idx = system
+    wl = make_workload(ds, kind="contains+between", n_queries=24, k=10,
+                       seed=1)
+    ids, dists, info = idx.search(wl.xq, wl.predicates, k=10)
+    assert recall_at_k(ids, wl.gt(ds)) > 0.75
+    # every result satisfies its predicate
+    masks = np.asarray(wl.masks(ds))
+    for q, row in enumerate(np.asarray(ids)):
+        for i in row:
+            if i >= 0:
+                assert masks[q, i]
+
+
+def test_unfiltered_query_degenerates_to_ann(system):
+    ds, idx = system
+    preds = [TruePredicate()] * 8
+    xq = ds.x[:8]
+    ids, dists, info = idx.search(xq, preds, k=5)
+    ids = np.asarray(ids)
+    # the query vectors are corpus points: each must find itself first
+    assert (ids[:, 0] == np.arange(8)).all()
+
+
+def test_routing_follows_selectivity(system):
+    ds, idx = system
+    xq = ds.x[:4]
+    wide = [Between("date", 0, 119)] * 4          # s ~ 1.0 -> graph
+    narrow = [Between("date", 5, 6)] * 4          # s ~ 0.017 < 1/10 -> pre
+    _, _, info_w = idx.search(xq, wide, k=5)
+    _, _, info_n = idx.search(xq, narrow, k=5)
+    assert (info_w["routes"] == "graph").all()
+    assert (info_n["routes"] == "prefilter").all()
+
+
+def test_regex_predicates_served(system):
+    ds, idx = system
+    from repro.core import RegexMatch
+    preds = [RegexMatch("caption", r"\banimal\b")] * 4
+    ids, _, _ = idx.search(ds.x[:4], preds, k=5)
+    caps = ds.table.str_cols["caption"]
+    for row in np.asarray(ids):
+        for i in row:
+            if i >= 0:
+                assert "animal" in caps[i]
