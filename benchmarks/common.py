@@ -64,11 +64,13 @@ def write_csv(name: str, header: List[str], rows: List[List]) -> str:
 
 
 def run_acorn(graph, x, wl, ds, ef: int, variant: str, m: int, m_beta: int,
-              compressed: bool = True) -> Dict:
+              compressed: bool = True, use_kernel: bool = False,
+              interpret: bool = True) -> Dict:
     masks, gt = wl.masks(ds), wl.gt(ds)
     kw = dict(k=K, ef=ef, variant=variant, m=m, m_beta=m_beta,
               compressed_level0=compressed and variant == "acorn-gamma",
-              max_expansions=4 * ef)
+              max_expansions=4 * ef, use_kernel=use_kernel,
+              interpret=interpret)
     ids, _, st = hybrid_search(graph, x, wl.xq, masks, **kw)
     qps = timed_qps(lambda: hybrid_search(graph, x, wl.xq, masks, **kw)[0],
                     wl.xq.shape[0])

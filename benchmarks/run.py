@@ -1,11 +1,16 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+        PYTHONPATH=src python -m benchmarks.run --smoke
 Prints ``name,metric,...`` CSV rows per benchmark plus a paper-claim
 validation summary (EXPERIMENTS.md records the full history).
+
+``--smoke`` is the CI gate for the perf entry points: tiny N, no plots,
+exits nonzero if recall collapses or batching stops paying.
 """
 import argparse
 import importlib
+import sys
 import time
 import traceback
 
@@ -19,14 +24,32 @@ MODULES = [
     ("table45_tti_size", "Tables 4+5: TTI and index size"),
     ("fig12_pruning", "Fig 12: pruning ablation"),
     ("fig13_graph_quality", "Fig 13: predicate-subgraph quality"),
+    ("bench_batched_search", "Batched search: jit buckets x kernel QPS"),
 ]
+
+
+def smoke() -> int:
+    """Tiny-N gate over the batched-search pipeline (CI: ~a minute)."""
+    from benchmarks import bench_batched_search
+    rows, checks = bench_batched_search.run(quick=True, write_json=False)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    ok = True
+    for name, passed in checks.items():
+        print(f"  [smoke] {name}: {'PASS' if passed else 'FAIL'}")
+        ok &= bool(passed)
+    return 0 if ok else 1
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-N CI gate; nonzero exit on recall collapse")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
     only = set(args.only.split(",")) if args.only else None
 
     all_checks, failures = {}, []

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .lm_common import CellDef
 
 ACORN_SHAPES: Dict[str, Dict] = {
@@ -115,7 +117,7 @@ class AcornServeArch:
             """x (n,d) corpus; queries (B,d); masks (B,n) -> (ids, dists)."""
             n = x.shape[0]
             base = jnp.arange(0, n, dtype=jnp.int32)
-            return jax.shard_map(
+            return shard_map(
                 local, mesh=mesh,
                 in_specs=(P(axes, None), P(), P(None, axes), P(axes)),
                 out_specs=(P(), P()), check_vma=False,

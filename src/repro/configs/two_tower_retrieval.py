@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.models.recsys import (TwoTowerConfig, init_two_tower,
                                  two_tower_loss, user_embed, item_embed)
 from repro.train.optimizer import init_adamw
@@ -57,7 +59,7 @@ def filtered_retrieval_step(mesh: Mesh, cfg: TwoTowerConfig, k: int = TOPK):
 
         n = cand_embs.shape[0]
         base = jnp.arange(0, n, dtype=jnp.int32)
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(axes, None), P(None, axes), P(axes)),
             out_specs=(P(), P()), check_vma=False,

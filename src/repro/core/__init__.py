@@ -7,6 +7,8 @@ from .graph import LayeredGraph, assign_levels, neighbor_rows, memory_bytes
 from .bruteforce import masked_topk, ground_truth, recall_at_k, pairwise_sq_l2
 from .build import build_acorn_gamma, build_acorn_1, build_hnsw, build_bulk
 from .search import hybrid_search, ann_search, SearchStats, get_neighbors
+from .batched import (DEFAULT_BUCKETS, VariantCache, plan_chunks,
+                      search_batch)
 from .baselines import (prefilter_search, postfilter_search,
                         OraclePartitionIndex)
 from .index import AcornConfig, HybridIndex
@@ -20,7 +22,8 @@ __all__ = [
     "memory_bytes", "masked_topk", "ground_truth", "recall_at_k",
     "pairwise_sq_l2", "build_acorn_gamma", "build_acorn_1", "build_hnsw",
     "build_bulk", "hybrid_search", "ann_search", "SearchStats",
-    "get_neighbors", "prefilter_search", "postfilter_search",
+    "get_neighbors", "DEFAULT_BUCKETS", "VariantCache", "plan_chunks",
+    "search_batch", "prefilter_search", "postfilter_search",
     "OraclePartitionIndex", "AcornConfig", "HybridIndex",
     "query_correlation",
 ]

@@ -1,0 +1,170 @@
+"""Bucketed batch execution for the hybrid-search pipeline.
+
+Serving traffic arrives as ragged query sets; jit re-traces on every new
+batch shape.  ``search_batch`` pads each request to a small, fixed set of
+*jit buckets* and dispatches through a compiled-variant cache keyed on
+``(bucket, k, ef, variant, ...)`` so a steady-state server runs exactly one
+trace per (bucket, search-config) pair, no matter what request sizes arrive.
+
+Chunk planning minimizes padded compute with a small per-dispatch penalty
+(``DISPATCH_COST_QUERIES``): 37 queries against buckets {16, 64} run as
+16 + 16 + pad(5 -> 16) rather than one pad(37 -> 64) launch; a single query
+against buckets {1, 16, ...} runs unpadded in the 1-bucket.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import LayeredGraph
+from .search import SearchStats, _search_impl
+
+Array = jax.Array
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 16, 64, 256)
+
+# A dispatch (python + jit-cache lookup + device launch) costs roughly this
+# many queries' worth of work; biases the planner toward padding a tail into
+# one launch instead of dribbling it through tiny buckets.
+DISPATCH_COST_QUERIES = 4
+
+
+def plan_chunks(total: int, buckets: Tuple[int, ...]) -> List[Tuple[int, int]]:
+    """Split ``total`` queries into (take, bucket) chunks.
+
+    Greedy: each step picks the bucket minimizing padded-compute plus the
+    dispatch penalty for the remaining queries; ties prefer the larger
+    bucket (fewer launches).
+    """
+    if total < 0:
+        raise ValueError(total)
+    bs = sorted(set(int(b) for b in buckets))
+    if not bs or bs[0] < 1:
+        raise ValueError(f"invalid buckets {buckets}")
+    chunks: List[Tuple[int, int]] = []
+    rem = total
+    while rem > 0:
+        best_b, best_cost = None, None
+        for b in bs:
+            launches = math.ceil(rem / b)
+            cost = (launches * b + launches * DISPATCH_COST_QUERIES, -b)
+            if best_cost is None or cost < best_cost:
+                best_b, best_cost = b, cost
+        take = min(rem, best_b)
+        chunks.append((take, best_b))
+        rem -= take
+    return chunks
+
+
+@dataclass
+class VariantCache:
+    """Compiled-variant cache: one jitted callable per (bucket, config) key.
+
+    ``trace_counts`` counts *actual retraces* (incremented from inside the
+    traced function, so cache hits at both layers cost zero) — the serving
+    regression guard: a steady-state engine must show exactly one trace per
+    (bucket, search-config) pair.
+    """
+    fns: Dict[tuple, Callable] = field(default_factory=dict)
+    trace_counts: Dict[tuple, int] = field(default_factory=dict)
+
+    def get(self, key: tuple, builder: Callable[[], Callable]) -> Callable:
+        fn = self.fns.get(key)
+        if fn is None:
+            fn = self.fns[key] = builder()
+        return fn
+
+    def bucket_traces(self) -> Dict[int, int]:
+        """Total traces per jit bucket size (key[0])."""
+        out: Dict[int, int] = {}
+        for key, n in self.trace_counts.items():
+            out[key[0]] = out.get(key[0], 0) + n
+        return out
+
+    @property
+    def num_traces(self) -> int:
+        return sum(self.trace_counts.values())
+
+
+_DEFAULT_CACHE = VariantCache()
+
+
+def _build_variant(cache: VariantCache, key: tuple,
+                   statics: dict) -> Callable:
+    def fn(graph, x, xq, masks):
+        # runs only while tracing -> counts real (re)compilations
+        cache.trace_counts[key] = cache.trace_counts.get(key, 0) + 1
+        return _search_impl(graph, x, xq, masks, **statics)
+
+    return jax.jit(fn)
+
+
+def pad_rows(a: Array, pad: int) -> Array:
+    """Pad a batch by repeating its last row ``pad`` times (discarded by the
+    caller after the bucketed dispatch)."""
+    return jnp.concatenate(
+        [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])])
+
+
+def search_batch(
+    graph: LayeredGraph,
+    x: Array,
+    xq: Array,
+    pass_masks: Optional[Array],
+    k: int = 10,
+    ef: int = 64,
+    variant: str = "acorn-gamma",
+    m: int = 16,
+    m_beta: int = 32,
+    metric: str = "l2",
+    compressed_level0: bool = True,
+    max_expansions: int = 512,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+    cache: Optional[VariantCache] = None,
+) -> Tuple[Array, Array, SearchStats]:
+    """Ragged-batch hybrid search through jit buckets.
+
+    Identical results to :func:`repro.core.search.hybrid_search` on the same
+    queries (padding lanes are discarded), but any request size dispatches
+    into a handful of fixed shapes.  ``pass_masks=None`` runs the unfiltered
+    substrate (``variant='hnsw'`` semantics of :func:`ann_search`).
+
+    Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
+    """
+    cache = _DEFAULT_CACHE if cache is None else cache
+    total = xq.shape[0]
+    if total == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return (jnp.zeros((0, k), jnp.int32), jnp.zeros((0, k), jnp.float32),
+                SearchStats(dist_comps=z, hops=z))
+    statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
+                   metric=metric, compressed_level0=compressed_level0,
+                   max_expansions=max_expansions, use_kernel=use_kernel,
+                   interpret=interpret)
+    outs: List[Tuple[Array, Array, Array, Array]] = []
+    start = 0
+    for take, bucket in plan_chunks(total, buckets):
+        q = xq[start:start + take]
+        msk = None if pass_masks is None else pass_masks[start:start + take]
+        if take < bucket:
+            q = pad_rows(q, bucket - take)
+            if msk is not None:
+                msk = pad_rows(msk, bucket - take)
+        key = (bucket, k, ef, variant, m, m_beta, metric, compressed_level0,
+               max_expansions, use_kernel, interpret, msk is not None)
+        fn = cache.get(key, lambda: _build_variant(cache, key, statics))
+        ids, d, stats = fn(graph, x, q, msk)
+        outs.append((ids[:take], d[:take], stats.dist_comps[:take],
+                     stats.hops[:take]))
+        start += take
+    ids = jnp.concatenate([o[0] for o in outs])
+    d = jnp.concatenate([o[1] for o in outs])
+    stats = SearchStats(dist_comps=jnp.concatenate([o[2] for o in outs]),
+                        hops=jnp.concatenate([o[3] for o in outs]))
+    return ids, d, stats

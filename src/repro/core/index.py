@@ -16,12 +16,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .baselines import prefilter_search
+from .batched import (DEFAULT_BUCKETS, VariantCache, pad_rows, plan_chunks,
+                      search_batch)
 from .build import build_acorn_1, build_acorn_gamma
 from .graph import INVALID, LayeredGraph, memory_bytes
 from .predicates import (AttributeTable, Predicate, SelectivitySketch,
                          evaluate_batch)
-from .search import SearchStats, hybrid_search
-
 Array = jax.Array
 
 
@@ -35,6 +35,10 @@ class AcornConfig:
     metric: str = "l2"
     compress: bool = True
     max_expansions: int = 512
+    # execution knobs (batched kernel-fused pipeline)
+    use_kernel: bool = False           # gather_distance Pallas kernel
+    interpret: bool = True             # interpret=True runs the kernel on CPU
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS  # jit batch buckets
 
     @property
     def s_min(self) -> float:
@@ -52,6 +56,8 @@ class HybridIndex:
     config: AcornConfig
     sketch: SelectivitySketch
     build_seconds: float = 0.0
+    # compiled-variant cache: one trace per (jit bucket, search config)
+    cache: VariantCache = field(default_factory=VariantCache)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -90,14 +96,24 @@ class HybridIndex:
         k: int = 10,
         ef: Optional[int] = None,
         force_route: Optional[str] = None,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None,
     ) -> Tuple[Array, Array, dict]:
         """Batched hybrid search with per-query cost-based routing.
+
+        Both routes dispatch through the jit-bucketed batch pipeline: the
+        graph route via :func:`repro.core.batched.search_batch` (with this
+        index's compiled-variant cache), the pre-filter route through the
+        same bucket padding — so ragged request sizes never re-trace.
+        ``use_kernel``/``interpret`` override the config knobs per call.
 
         Returns (ids (B,k), dists (B,k), info) where info records the route
         taken per query and search stats.
         """
         cfg = self.config
         ef = ef or cfg.ef_search
+        use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
+        interpret = cfg.interpret if interpret is None else interpret
         masks = evaluate_batch(predicates, self.table)  # (B, n)
         s_est = np.array([self.sketch.estimate(p) for p in predicates])
         if force_route == "graph":
@@ -115,19 +131,30 @@ class HybridIndex:
         pre_idx = np.nonzero(use_pre)[0]
         gr_idx = np.nonzero(~use_pre)[0]
         if len(pre_idx):
-            ids, d = prefilter_search(xq[pre_idx], self.x, masks[pre_idx], k,
-                                      metric=cfg.metric)
-            out_ids[pre_idx] = np.asarray(ids)
-            out_d[pre_idx] = np.asarray(d)
+            xq_pre, masks_pre = xq[pre_idx], masks[pre_idx]
+            start = 0
+            for take, bucket in plan_chunks(len(pre_idx), cfg.buckets):
+                sl = slice(start, start + take)
+                q, msk = xq_pre[sl], masks_pre[sl]
+                if take < bucket:
+                    q = pad_rows(q, bucket - take)
+                    msk = pad_rows(msk, bucket - take)
+                ids, d = prefilter_search(q, self.x, msk, k,
+                                          metric=cfg.metric)
+                dst = pre_idx[sl]
+                out_ids[dst] = np.asarray(ids)[:take]
+                out_d[dst] = np.asarray(d)[:take]
+                start += take
             dist_comps[pre_idx] = np.asarray(masks[pre_idx].sum(axis=1))
         if len(gr_idx):
             variant = cfg.variant
-            ids, d, stats = hybrid_search(
+            ids, d, stats = search_batch(
                 self.graph, self.x, xq[gr_idx], masks[gr_idx], k=k, ef=ef,
                 variant=variant, m=cfg.M, m_beta=cfg.resolved_m_beta(),
                 metric=cfg.metric,
                 compressed_level0=cfg.compress and variant == "acorn-gamma",
-                max_expansions=cfg.max_expansions)
+                max_expansions=cfg.max_expansions, use_kernel=use_kernel,
+                interpret=interpret, buckets=cfg.buckets, cache=self.cache)
             out_ids[gr_idx] = np.asarray(ids)
             out_d[gr_idx] = np.asarray(d)
             dist_comps[gr_idx] = np.asarray(stats.dist_comps)

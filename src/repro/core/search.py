@@ -1,10 +1,20 @@
 """ACORN predicate-subgraph traversal (paper Algorithms 1-2, Figure 4).
 
-TPU adaptation (DESIGN.md §2): the greedy beam search runs as a
-``jax.lax.while_loop`` over fixed-size sorted beams, ``vmap``-ed over the
-query batch; all heaps/sets become fixed-shape masked arrays.  Converged
-lanes run masked no-op bodies (vmap of while_loop executes the body for all
-lanes until every lane's condition is false).
+TPU adaptation (DESIGN.md §2): the greedy descent and the level-0 beam
+search run as *explicitly batched* ``jax.lax.while_loop``s over fixed-size
+sorted beams; all heaps/sets become fixed-shape masked arrays.  Per-lane
+convergence follows the vmap-of-while_loop contract: the loop runs until
+every lane's condition is false, and a converged lane's carry is frozen.
+
+Batching the loop state (rather than ``vmap``-ing a scalar search) lets
+every beam-expansion distance computation issue as ONE call over the whole
+query batch, which routes through the ``gather_distance`` Pallas kernel
+(DMA-gathered rows + fused distance) when ``use_kernel=True`` — on CPU CI
+the kernel runs in interpret mode (``interpret=True``); ``use_kernel=False``
+selects the pure-jnp reference path.  The per-expansion beam update is a
+bounded sorted-merge (``repro.kernels.filtered_topk.bounded_sorted_merge``)
+instead of a full ``argsort`` of the (ef + M) concatenation: the beam is
+already sorted, so only the M candidates need ordering.
 
 Neighbor-lookup strategies (Figure 4):
   'plain'    — first entries of N^l(c), no predicate (HNSW search +
@@ -24,6 +34,10 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.filtered_topk.merge import bounded_sorted_merge
+from repro.kernels.gather_distance.ops import gather_distance
+from repro.kernels.gather_distance.ref import gather_distance_ref
 
 from .graph import INVALID, LayeredGraph, neighbor_rows
 
@@ -60,6 +74,11 @@ def dedup_mask(ids: Array) -> Array:
     # sorted run is the earliest original occurrence
     mask = jnp.zeros((c,), bool).at[order].set(first_sorted)
     return mask & (ids >= 0)
+
+
+def _lanes(active: Array, ndim: int) -> Array:
+    """Broadcast a (B,) lane mask against an ndim-rank batched array."""
+    return jnp.reshape(active, active.shape + (1,) * (ndim - 1))
 
 
 # ---------------------------------------------------------------------------
@@ -135,46 +154,69 @@ def _strategy_for(variant: str, level: int, compressed_level0: bool) -> str:
     raise ValueError(variant)
 
 
+def _batched_neighbors(graph, level, cs, pass_mask, strategy, m, m_beta,
+                       visited=None):
+    """vmap of get_neighbors over the query batch: (B,) ids -> (B, M)."""
+    fn = lambda c, pm, vis: get_neighbors(graph, level, c, pm, strategy, m,
+                                          m_beta, visited=vis)
+    ax_pm = None if pass_mask is None else 0
+    ax_vis = None if visited is None else 0
+    return jax.vmap(fn, in_axes=(0, ax_pm, ax_vis))(cs, pass_mask, visited)
+
+
 # ---------------------------------------------------------------------------
 # the search itself
 # ---------------------------------------------------------------------------
 
 
-def _dists(x: Array, ids: Array, xq: Array, metric: str) -> Array:
-    safe = jnp.clip(ids, 0, x.shape[0] - 1)
-    v = x[safe]
-    if metric == "l2":
-        d = jnp.sum((v - xq[None, :]) ** 2, axis=-1)
-    elif metric == "ip":
-        d = -(v @ xq)
-    else:
-        raise ValueError(metric)
-    return jnp.where(ids >= 0, d, INF)
+def _batch_dists(x: Array, ids: Array, xq: Array, metric: str,
+                 use_kernel: bool, interpret: bool) -> Array:
+    """Distances from each query to its gathered neighbor rows.
+
+    ids (B, M) int32 (-1 padded), xq (B, d) -> (B, M); INVALID ids -> +inf.
+    The single point where the search pipeline touches vector data: routed
+    through the gather_distance Pallas kernel or its jnp reference.
+    """
+    if use_kernel:
+        return gather_distance(ids, xq, x, metric=metric, use_kernel=True,
+                               interpret=interpret)
+    return gather_distance_ref(ids, xq, x, metric)
 
 
-def _greedy_level(graph, x, level, e, e_dist, xq, pass_mask, strategy, m,
-                  m_beta, metric, max_steps, n_dc):
-    """ef=1 greedy descent step at one level (Algorithm 1 upper levels)."""
+def _greedy_level(graph, x, level, e, ed, xq, pass_mask, strategy, m,
+                  m_beta, metric, max_steps, dc, use_kernel, interpret):
+    """Batched ef=1 greedy descent at one level (Algorithm 1 upper levels).
 
-    def cond(state):
+    e (B,) current nodes, ed (B,) their distances; lanes freeze once their
+    own step stops improving (vmap-of-while_loop carry contract)."""
+
+    def lane_cond(state):
         _, _, moved, it, _ = state
         return moved & (it < max_steps)
 
-    def body(state):
-        e, ed, _, it, dc = state
-        nbrs = get_neighbors(graph, level, e, pass_mask, strategy, m, m_beta)
-        d = _dists(x, nbrs, xq, metric)
-        dc = dc + jnp.sum(nbrs >= 0, dtype=jnp.int32)
-        j = jnp.argmin(d)
-        better = d[j] < ed
-        e2 = jnp.where(better, nbrs[j], e)
-        ed2 = jnp.where(better, d[j], ed)
-        return (e2, ed2, better, it + 1, dc)
+    def cond(state):
+        return lane_cond(state).any()
 
-    e, ed, _, _, n_dc = jax.lax.while_loop(
-        cond, body, (e, e_dist, jnp.asarray(True), jnp.asarray(0, jnp.int32), n_dc)
-    )
-    return e, ed, n_dc
+    def body(state):
+        e, ed, moved, it, dc = state
+        active = lane_cond(state)
+        nbrs = _batched_neighbors(graph, level, e, pass_mask, strategy, m,
+                                  m_beta)
+        d = _batch_dists(x, nbrs, xq, metric, use_kernel, interpret)
+        dc2 = dc + jnp.sum(nbrs >= 0, axis=1, dtype=jnp.int32)
+        j = jnp.argmin(d, axis=1)
+        dj = jnp.take_along_axis(d, j[:, None], axis=1)[:, 0]
+        nj = jnp.take_along_axis(nbrs, j[:, None], axis=1)[:, 0]
+        better = dj < ed
+        new_state = (jnp.where(better, nj, e), jnp.where(better, dj, ed),
+                     better, it + 1, dc2)
+        return tuple(jnp.where(_lanes(active, nw.ndim), nw, od)
+                     for nw, od in zip(new_state, state))
+
+    b = e.shape[0]
+    state = (e, ed, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32), dc)
+    e, ed, _, _, dc = jax.lax.while_loop(cond, body, state)
+    return e, ed, dc
 
 
 def _search_impl(
@@ -190,31 +232,38 @@ def _search_impl(
     metric: str,
     compressed_level0: bool,
     max_expansions: int,
+    use_kernel: bool,
+    interpret: bool,
 ) -> Tuple[Array, Array, SearchStats]:
-    """Single-query hybrid search; vmapped by the public wrappers."""
+    """Batched hybrid search: xq (B, d), pass_mask (B, n) or None."""
+    b = xq.shape[0]
     n = x.shape[0]
     top = graph.num_levels - 1
-    e = graph.entry_point
-    ed = _dists(x, e[None], xq, metric)[0]
-    dc = jnp.asarray(1, jnp.int32)
+    rows = jnp.arange(b)
+    e = jnp.broadcast_to(graph.entry_point, (b,)).astype(jnp.int32)
+    ed = _batch_dists(x, e[:, None], xq, metric, use_kernel, interpret)[:, 0]
+    dc = jnp.ones((b,), jnp.int32)
 
     # ---- stage 1 + upper levels: greedy descent (Algorithm 1) ----
     for lvl in range(top, 0, -1):
         strat = _strategy_for(variant, lvl, compressed_level0)
         e, ed, dc = _greedy_level(graph, x, lvl, e, ed, xq, pass_mask, strat,
-                                  m, m_beta, metric, 128, dc)
+                                  m, m_beta, metric, 128, dc, use_kernel,
+                                  interpret)
 
     # ---- level 0: beam search (Algorithm 2) ----
     strat0 = _strategy_for(variant, 0, compressed_level0)
-    beam_ids = jnp.full((ef,), INVALID, jnp.int32).at[0].set(e)
-    beam_d = jnp.full((ef,), INF).at[0].set(ed)
-    beam_exp = jnp.zeros((ef,), bool)
+    e_safe = jnp.clip(e, 0, n - 1)
+    beam_ids = jnp.full((b, ef), INVALID, jnp.int32).at[:, 0].set(e)
+    beam_d = jnp.full((b, ef), INF).at[:, 0].set(ed)
+    beam_exp = jnp.zeros((b, ef), bool)
     if pass_mask is None:
-        e_pass = jnp.asarray(True)
+        e_pass = jnp.ones((b,), bool)
     else:
-        e_pass = pass_mask[jnp.clip(e, 0, n - 1)] & (e >= 0)
-    beam_pass = jnp.zeros((ef,), bool).at[0].set(e_pass)
-    visited = jnp.zeros((n,), bool).at[jnp.clip(e, 0, n - 1)].set(True)
+        e_pass = (jnp.take_along_axis(pass_mask, e_safe[:, None], axis=1)[:, 0]
+                  & (e >= 0))
+    beam_pass = jnp.zeros((b, ef), bool).at[:, 0].set(e_pass)
+    visited = jnp.zeros((b, n), bool).at[rows, e_safe].set(True)
 
     # Multi-seed (beyond-paper, EXPERIMENTS.md §Repro-notes): when the
     # predicate-passing set is multi-region, a single entry confines the
@@ -224,74 +273,87 @@ def _search_impl(
     # step already paid in spirit; ef must simply be > m).
     if pass_mask is not None and graph.num_levels > 1 and ef > m:
         strat1 = _strategy_for(variant, 1, compressed_level0)
-        seeds = get_neighbors(graph, 1, e, pass_mask, strat1, m, m_beta)
-        sd = _dists(x, seeds, xq, metric)
-        dc = dc + jnp.sum(seeds >= 0, dtype=jnp.int32)
-        dup = seeds == e
+        seeds = _batched_neighbors(graph, 1, e, pass_mask, strat1, m, m_beta)
+        seeds = seeds[:, :m]  # 'plain' rows may be wider than m
+        s = seeds.shape[1]
+        sd = _batch_dists(x, seeds, xq, metric, use_kernel, interpret)
+        dc = dc + jnp.sum(seeds >= 0, axis=1, dtype=jnp.int32)
+        dup = seeds == e[:, None]
         sd = jnp.where(dup, INF, sd)
-        beam_ids = beam_ids.at[1:m + 1].set(jnp.where(dup, INVALID, seeds))
-        beam_d = beam_d.at[1:m + 1].set(sd)
-        beam_pass = beam_pass.at[1:m + 1].set((seeds >= 0) & ~dup)
-        visited = visited.at[jnp.clip(seeds, 0, n - 1)].max(seeds >= 0)
+        beam_ids = beam_ids.at[:, 1:s + 1].set(jnp.where(dup, INVALID, seeds))
+        beam_d = beam_d.at[:, 1:s + 1].set(sd)
+        beam_pass = beam_pass.at[:, 1:s + 1].set((seeds >= 0) & ~dup)
+        visited = visited.at[rows[:, None],
+                             jnp.clip(seeds, 0, n - 1)].max(seeds >= 0)
 
-    def cond(state):
+    # the bounded sorted-merge maintains a sorted beam; establish the
+    # invariant once (stable: ties keep insertion order, matching argsort)
+    order0 = jnp.argsort(beam_d, axis=1, stable=True)
+    beam_ids = jnp.take_along_axis(beam_ids, order0, axis=1)
+    beam_d = jnp.take_along_axis(beam_d, order0, axis=1)
+    beam_pass = jnp.take_along_axis(beam_pass, order0, axis=1)
+
+    def lane_cond(state):
         beam_ids, beam_d, beam_exp, _, _, it, _ = state
         unexp = (beam_ids >= 0) & ~beam_exp
-        any_unexp = unexp.any()
-        best_unexp = jnp.where(unexp, beam_d, INF).min()
-        full = (beam_ids >= 0).all()
-        worst = jnp.where(full, beam_d.max(), INF)
+        any_unexp = unexp.any(axis=1)
+        best_unexp = jnp.where(unexp, beam_d, INF).min(axis=1)
+        full = (beam_ids >= 0).all(axis=1)
+        worst = jnp.where(full, beam_d.max(axis=1), INF)
         return any_unexp & (best_unexp <= worst) & (it < max_expansions)
+
+    def cond(state):
+        return lane_cond(state).any()
 
     def body(state):
         beam_ids, beam_d, beam_exp, beam_pass, visited, it, dc = state
-        active = cond(state)  # no-op guard for converged vmap lanes
+        active = lane_cond(state)  # per-lane no-op guard for frozen lanes
         unexp = (beam_ids >= 0) & ~beam_exp
-        sel = jnp.argmin(jnp.where(unexp, beam_d, INF))
-        c = beam_ids[sel]
-        beam_exp2 = beam_exp.at[sel].set(True)
+        sel = jnp.argmin(jnp.where(unexp, beam_d, INF), axis=1)
+        c = jnp.take_along_axis(beam_ids, sel[:, None], axis=1)[:, 0]
+        beam_exp2 = beam_exp.at[rows, sel].set(True)
 
-        nbrs = get_neighbors(graph, 0, c, pass_mask, strat0, m, m_beta,
-                             visited=visited)
-        fresh = (nbrs >= 0) & ~visited[jnp.clip(nbrs, 0, n - 1)]
-        nd = jnp.where(fresh, _dists(x, nbrs, xq, metric), INF)
-        dc2 = dc + jnp.sum(fresh, dtype=jnp.int32)
-        visited2 = visited.at[jnp.clip(nbrs, 0, n - 1)].max(nbrs >= 0)
+        nbrs = _batched_neighbors(graph, 0, c, pass_mask, strat0, m, m_beta,
+                                  visited=visited)
+        safe = jnp.clip(nbrs, 0, n - 1)
+        fresh = (nbrs >= 0) & ~jnp.take_along_axis(visited, safe, axis=1)
+        nd = jnp.where(fresh,
+                       _batch_dists(x, nbrs, xq, metric, use_kernel,
+                                    interpret), INF)
+        dc2 = dc + jnp.sum(fresh, axis=1, dtype=jnp.int32)
+        visited2 = visited.at[rows[:, None], safe].max(nbrs >= 0)
 
-        # merge into beam: (ef + m) sort, keep best ef
-        all_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, INVALID)])
-        all_d = jnp.concatenate([beam_d, nd])
-        all_exp = jnp.concatenate([beam_exp2, jnp.zeros_like(fresh)])
-        all_pass = jnp.concatenate([beam_pass, fresh])
-        order = jnp.argsort(all_d)[:ef]
-        new_state = (
-            all_ids[order], all_d[order], all_exp[order], all_pass[order],
-            visited2, it + 1, dc2,
-        )
-        old_state = (beam_ids, beam_d, beam_exp, beam_pass, visited, it + 1, dc)
-        return jax.tree_util.tree_map(
-            lambda nw, od: jnp.where(
-                jnp.reshape(active, (1,) * nw.ndim), nw, od), new_state, old_state
-        )
+        # bounded sorted-merge into the beam: O((ef+M) log M), not a full
+        # (ef+M) argsort — beam is sorted, only the M candidates are not
+        cand_ids = jnp.where(fresh, nbrs, INVALID)
+        merged_d, (m_ids, m_exp, m_pass) = bounded_sorted_merge(
+            beam_d, nd,
+            (beam_ids, beam_exp2, beam_pass),
+            (cand_ids, jnp.zeros_like(fresh), fresh))
+        new_state = (m_ids, merged_d, m_exp, m_pass, visited2, it + 1, dc2)
+        return tuple(jnp.where(_lanes(active, nw.ndim), nw, od)
+                     for nw, od in zip(new_state, state))
 
     state = (beam_ids, beam_d, beam_exp, beam_pass, visited,
-             jnp.asarray(0, jnp.int32), dc)
+             jnp.zeros((b,), jnp.int32), dc)
     beam_ids, beam_d, beam_exp, beam_pass, visited, hops, dc = (
         jax.lax.while_loop(cond, body, state)
     )
 
     # final top-k among predicate-passing beam entries
     final_d = jnp.where(beam_pass & (beam_ids >= 0), beam_d, INF)
-    order = jnp.argsort(final_d)[:k]
-    out_ids = jnp.where(jnp.isfinite(final_d[order]), beam_ids[order], INVALID)
-    out_d = final_d[order]
+    order = jnp.argsort(final_d, axis=1, stable=True)[:, :k]
+    out_d = jnp.take_along_axis(final_d, order, axis=1)
+    out_ids = jnp.where(jnp.isfinite(out_d),
+                        jnp.take_along_axis(beam_ids, order, axis=1), INVALID)
     return out_ids, out_d, SearchStats(dist_comps=dc, hops=hops)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "ef", "variant", "m", "m_beta", "metric",
-                     "compressed_level0", "max_expansions"),
+                     "compressed_level0", "max_expansions", "use_kernel",
+                     "interpret"),
 )
 def hybrid_search(
     graph: LayeredGraph,
@@ -306,21 +368,27 @@ def hybrid_search(
     metric: str = "l2",
     compressed_level0: bool = True,
     max_expansions: int = 512,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ):
     """Batched hybrid search.
 
     xq: (B, d) queries; pass_mask: (B, n) predicate masks.
+    ``use_kernel`` routes distance computations through the gather_distance
+    Pallas kernel (``interpret=True`` for CPU execution; compiled on TPU);
+    ``use_kernel=False`` is the pure-jnp reference path — both return
+    identical neighbor ids.
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
-    fn = lambda q, msk: _search_impl(
-        graph, x, q, msk, k, ef, variant, m, m_beta, metric,
-        compressed_level0, max_expansions)
-    return jax.vmap(fn)(xq, pass_mask)
+    return _search_impl(
+        graph, x, xq, pass_mask, k, ef, variant, m, m_beta, metric,
+        compressed_level0, max_expansions, use_kernel, interpret)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "ef", "m", "metric", "max_expansions"),
+    static_argnames=("k", "ef", "m", "metric", "max_expansions", "use_kernel",
+                     "interpret"),
 )
 def ann_search(
     graph: LayeredGraph,
@@ -331,8 +399,10 @@ def ann_search(
     m: int = 32,
     metric: str = "l2",
     max_expansions: int = 512,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ):
     """Plain (unfiltered) HNSW ANN search — baseline substrate."""
-    fn = lambda q: _search_impl(
-        graph, x, q, None, k, ef, "hnsw", m, 0, metric, False, max_expansions)
-    return jax.vmap(fn)(xq)
+    return _search_impl(
+        graph, x, xq, None, k, ef, "hnsw", m, 0, metric, False,
+        max_expansions, use_kernel, interpret)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 Array = jax.Array
 
 
@@ -36,7 +38,7 @@ def sharded_topk(mesh: Mesh, dp, tp: str = "model"):
             s2, pos2 = jax.lax.top_k(s_all, k)
             return jnp.take_along_axis(i_all, pos2, axis=1), s2
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(dp, tp), P(dp, tp)),
             out_specs=(P(dp, None), P(dp, None)), check_vma=False,
@@ -71,7 +73,7 @@ def make_sharded_lookup(mesh: Mesh, dp, tp: str = "model") -> Callable:
             return jax.lax.psum(out, tp)
 
         ndim_ids = ids.ndim
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(tp, None), P(dp, *([None] * (ndim_ids - 1)))),
             out_specs=P(dp, *([None] * ndim_ids)),
@@ -108,7 +110,7 @@ def split_kv_decode_attention(mesh: Mesh, seq_axis: str = "data"):
         return (wv / jnp.maximum(z, 1e-30)[..., None]).astype(q.dtype)
 
     def apply(q, k, v, valid):
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(None, seq_axis), P(None, seq_axis),
                       P(None, seq_axis)),

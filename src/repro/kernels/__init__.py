@@ -11,6 +11,7 @@ with use_kernel routing), ref.py (pure-jnp oracle used by the allclose
 sweeps in tests/test_kernels.py).
 """
 from .filtered_topk.ops import filtered_topk
+from .filtered_topk.merge import bounded_sorted_merge, bounded_sorted_merge_ref
 from .gather_distance.ops import gather_distance
 from .embedding_bag.ops import embedding_bag
 from .pna_aggregate.ops import pna_aggregate, pna_aggregate_segment

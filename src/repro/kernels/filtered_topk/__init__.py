@@ -1,1 +1,4 @@
-from .ops import *
+from .ops import filtered_topk
+from .merge import bounded_sorted_merge, bounded_sorted_merge_ref
+
+__all__ = ["filtered_topk", "bounded_sorted_merge", "bounded_sorted_merge_ref"]

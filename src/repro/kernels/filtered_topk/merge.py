@@ -1,0 +1,95 @@
+"""Bounded sorted-merge: the beam-update primitive of the search hot path.
+
+Algorithm 2's beam maintenance merges the (sorted, length-L) beam with the
+<=C freshly-scored neighbor candidates of one expansion and keeps the best L.
+A full ``argsort`` of the (L + C) concatenation costs O((L+C) log(L+C)) per
+expansion; but the beam is *already sorted*, so only the candidates need
+ordering.  This op sorts the C candidates (C = M << L = ef), computes merge
+positions with two ``searchsorted`` rank passes (O((L+C) log C) comparisons),
+and scatters directly into the length-L output, dropping everything that
+falls beyond the bound.
+
+Tie-breaking is identical to a stable argsort of ``[beam, candidates]``:
+beam entries precede equal-valued candidates (``side='left'`` vs
+``side='right'``), and both sides preserve their own insertion order — the
+exact-parity contract the search pipeline relies on.
+
+``bounded_sorted_merge_ref`` is the stable-argsort oracle used by the parity
+tests in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _merge_positions(beam_d: Array, cand_sorted: Array) -> Tuple[Array, Array]:
+    """Merge-path ranks: output position of each beam entry / sorted cand.
+
+    beam_d (B, L) ascending, cand_sorted (B, C) ascending ->
+    (pos_beam (B, L), pos_cand (B, C)), a permutation of 0..L+C-1 per row.
+    """
+    l = beam_d.shape[-1]
+    c = cand_sorted.shape[-1]
+    rank_b = jax.vmap(lambda a, v: jnp.searchsorted(a, v, side="left"))(
+        cand_sorted, beam_d)
+    rank_c = jax.vmap(lambda a, v: jnp.searchsorted(a, v, side="right"))(
+        beam_d, cand_sorted)
+    pos_beam = jnp.arange(l, dtype=rank_b.dtype)[None, :] + rank_b
+    pos_cand = jnp.arange(c, dtype=rank_c.dtype)[None, :] + rank_c
+    return pos_beam, pos_cand
+
+
+def bounded_sorted_merge(
+    beam_d: Array,
+    cand_d: Array,
+    beam_payload: Tuple[Array, ...] = (),
+    cand_payload: Tuple[Array, ...] = (),
+):
+    """Merge a sorted beam with unsorted candidates, keep the best L.
+
+    beam_d (B, L) ascending; cand_d (B, C) unsorted (+inf = absent).
+    ``beam_payload`` / ``cand_payload`` are matching tuples of (B, L) / (B, C)
+    arrays carried through the merge (ids, expanded flags, predicate flags).
+
+    Returns ``(merged_d (B, L), merged_payloads)`` — the first L entries of
+    the stable ascending merge.
+    """
+    l = beam_d.shape[-1]
+    b = beam_d.shape[0]
+    cand_order = jnp.argsort(cand_d, axis=-1, stable=True)
+    cand_sorted = jnp.take_along_axis(cand_d, cand_order, axis=-1)
+    pos_beam, pos_cand = _merge_positions(beam_d, cand_sorted)
+    rows = jnp.arange(b)[:, None]
+
+    def scatter(bv, cv):
+        out = jnp.zeros((b, l), bv.dtype)
+        out = out.at[rows, pos_beam].set(bv, mode="drop")
+        return out.at[rows, pos_cand].set(cv, mode="drop")
+
+    merged_d = scatter(beam_d, cand_sorted)
+    merged_payloads = tuple(
+        scatter(bp, jnp.take_along_axis(cp, cand_order, axis=-1))
+        for bp, cp in zip(beam_payload, cand_payload))
+    return merged_d, merged_payloads
+
+
+def bounded_sorted_merge_ref(
+    beam_d: Array,
+    cand_d: Array,
+    beam_payload: Tuple[Array, ...] = (),
+    cand_payload: Tuple[Array, ...] = (),
+):
+    """Oracle: stable argsort of the concatenation, truncated to L."""
+    l = beam_d.shape[-1]
+    all_d = jnp.concatenate([beam_d, cand_d], axis=-1)
+    order = jnp.argsort(all_d, axis=-1, stable=True)[:, :l]
+    merged_d = jnp.take_along_axis(all_d, order, axis=-1)
+    merged_payloads = tuple(
+        jnp.take_along_axis(jnp.concatenate([bp, cp], axis=-1), order, axis=-1)
+        for bp, cp in zip(beam_payload, cand_payload))
+    return merged_d, merged_payloads

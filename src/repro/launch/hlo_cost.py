@@ -139,8 +139,15 @@ class Cost:
             d["bytes"] += v["bytes"] * mult
 
 
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
 def _split_operands(rest: str) -> List[str]:
-    """Names of %operands in the call parens (stops at closing paren)."""
+    """Names of %operands in the call parens (stops at closing paren).
+
+    Handles both operand syntaxes: bare names (``dot(%a, %b)``) and
+    inline-shaped (``dot(f32[4,64]{1,0} %a, ...)``) — the commas inside
+    shape brackets make naive comma-splitting drop every operand."""
     depth = 1
     out = []
     cur = ""
@@ -152,11 +159,7 @@ def _split_operands(rest: str) -> List[str]:
             if depth == 0:
                 break
         cur += ch
-    for tok in cur.split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok[1:])
-    return out
+    return [m.group(1) for m in _OPND_RE.finditer(cur)]
 
 
 class HloCostModel:
@@ -267,6 +270,12 @@ class HloCostModel:
                 indexed_inner = any(
                     i.opcode in _INDEXED
                     for i in self.comps.get(mcalls.group(1), []))
+            if op == "call":
+                # pure delegation: the callee accounts its own traffic
+                # (unlike fusion, whose internals stay in registers)
+                if mcalls:
+                    c.bytes += inner.bytes
+                return c
             if indexed_inner:
                 # gather/scatter fusion: only the indexed rows are touched,
                 # not the whole table operand

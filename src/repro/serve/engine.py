@@ -2,8 +2,11 @@
 
 Operational wrapper around HybridIndex for production serving:
 
-  * request batching — queries accumulate into fixed-size batches (padded to
-    the jit bucket so step shapes stay cached);
+  * request batching — queries accumulate into ``batch_size`` chunks and
+    each shard dispatches them through the jit-bucketed batch pipeline
+    (``repro.core.batched.search_batch`` via ``HybridIndex.search``), so a
+    ragged request stream runs against a handful of compiled shapes and the
+    engine never re-traces per request shape;
   * per-query cost-based routing (ACORN graph vs pre-filter, §5.2) — done
     inside HybridIndex; the engine exposes route statistics;
   * straggler mitigation — in the multi-host layout each corpus shard is a
@@ -18,14 +21,12 @@ Operational wrapper around HybridIndex for production serving:
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AcornConfig, HybridIndex, Predicate, recall_at_k)
+from repro.core import AcornConfig, HybridIndex, Predicate
 from repro.core.predicates import AttributeTable
 
 
@@ -36,6 +37,8 @@ class EngineConfig:
     ef: int = 64
     n_shards: int = 1
     duplicate_dispatch: bool = False  # straggler mitigation (mirrored shards)
+    use_kernel: Optional[bool] = None  # None -> AcornConfig knob
+    interpret: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -82,8 +85,9 @@ class ServingEngine:
                 if not shard.healthy and attempt == 0:
                     self.stats["duplicated_dispatches"] += 1
                     continue  # primary "failed"; mirror answers
-                ids, d, info = shard.index.search(xq, predicates, k=cfg.k,
-                                                  ef=cfg.ef)
+                ids, d, info = shard.index.search(
+                    xq, predicates, k=cfg.k, ef=cfg.ef,
+                    use_kernel=cfg.use_kernel, interpret=cfg.interpret)
                 result = (ids, d, info)
                 break
             if result is None:  # all mirrors down -> shard contributes none
@@ -108,23 +112,28 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def serve(self, xq, predicates: Sequence[Predicate]):
-        """Batch an arbitrary request stream into cfg.batch_size chunks."""
+        """Batch an arbitrary request stream into cfg.batch_size chunks.
+
+        Chunks are NOT padded here: each shard's ``HybridIndex.search`` pads
+        to its jit buckets, so ragged tails reuse the per-bucket compiled
+        variants instead of minting a new shape."""
         b = self.cfg.batch_size
         outs_i, outs_d = [], []
         n = xq.shape[0]
         for start in range(0, n, b):
             stop = min(start + b, n)
-            q = xq[start:stop]
-            preds = list(predicates[start:stop])
-            if stop - start < b:  # pad to the jit bucket
-                pad = b - (stop - start)
-                q = jnp.concatenate([q, jnp.broadcast_to(q[-1:],
-                                                         (pad,) + q.shape[1:])])
-                preds = preds + [preds[-1]] * pad
-            ids, d = self.search_batch(q, preds)
-            outs_i.append(ids[: stop - start])
-            outs_d.append(d[: stop - start])
+            ids, d = self.search_batch(xq[start:stop],
+                                       list(predicates[start:stop]))
+            outs_i.append(ids)
+            outs_d.append(d)
         return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
+
+    # ------------------------------------------------------------------
+    def trace_counts(self) -> Dict[int, Dict[int, int]]:
+        """Per-shard compiled-variant traces by jit bucket (regression
+        guard: steady-state serving must not mint new shapes)."""
+        return {s: shard.index.cache.bucket_traces()
+                for s, shard in enumerate(self.shards)}
 
     # ------------------------------------------------------------------
     # fault tolerance

@@ -1,0 +1,148 @@
+"""Batched jit-bucketed execution: ragged parity, trace accounting, knobs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AcornConfig, HybridIndex, VariantCache,
+                        build_acorn_1, build_acorn_gamma, build_hnsw,
+                        hybrid_search, plan_chunks, search_batch)
+from repro.data import make_lcps_dataset, make_workload
+
+KEY = jax.random.PRNGKey(0)
+N_RAGGED = 37  # deliberately not a multiple of any bucket
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_lcps_dataset(n=1500, d=12, card=6, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl(ds):
+    return make_workload(ds, kind="equals", n_queries=N_RAGGED, k=10, seed=1,
+                         card=6)
+
+
+@pytest.fixture(scope="module")
+def graphs(ds):
+    return {
+        "acorn-gamma": build_acorn_gamma(ds.x, KEY, M=8, gamma=6, m_beta=16),
+        "acorn-1": build_acorn_1(ds.x, KEY, M=8),
+        "hnsw": build_hnsw(ds.x, KEY, M=8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunk planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chunks_ragged_prefers_small_buckets():
+    assert plan_chunks(37, (16, 64)) == [(16, 16), (16, 16), (5, 16)]
+
+
+def test_plan_chunks_single_query_uses_unit_bucket():
+    assert plan_chunks(1, (1, 16, 64)) == [(1, 1)]
+
+
+def test_plan_chunks_large_batch_uses_large_bucket():
+    chunks = plan_chunks(100, (16, 64))
+    assert chunks[0] == (64, 64)
+    assert sum(t for t, _ in chunks) == 100
+    assert all(t <= b for t, b in chunks)
+
+
+def test_plan_chunks_exact_fit_and_empty():
+    assert plan_chunks(64, (16, 64)) == [(64, 64)]
+    assert plan_chunks(0, (16, 64)) == []
+
+
+# ---------------------------------------------------------------------------
+# ragged parity: search_batch == per-query hybrid_search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["acorn-gamma", "acorn-1", "hnsw"])
+def test_search_batch_matches_per_query(ds, wl, graphs, variant):
+    g = graphs[variant]
+    masks = wl.masks(ds)
+    kw = dict(k=10, ef=32, variant=variant, m=8, m_beta=16,
+              compressed_level0=variant == "acorn-gamma")
+    ids_b, d_b, stats_b = search_batch(g, ds.x, wl.xq, masks,
+                                       buckets=(16, 64), cache=VariantCache(),
+                                       **kw)
+    ids_q, d_q = [], []
+    for i in range(N_RAGGED):
+        ids, d, _ = hybrid_search(g, ds.x, wl.xq[i:i + 1], masks[i:i + 1],
+                                  **kw)
+        ids_q.append(np.asarray(ids))
+        d_q.append(np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(ids_b), np.concatenate(ids_q))
+    np.testing.assert_allclose(np.asarray(d_b), np.concatenate(d_q),
+                               rtol=1e-6)
+    assert ids_b.shape == (N_RAGGED, 10)
+    assert stats_b.dist_comps.shape == (N_RAGGED,)
+
+
+def test_search_batch_kernel_on_off_identical_ids(ds, wl, graphs):
+    g = graphs["acorn-gamma"]
+    masks = wl.masks(ds)
+    kw = dict(k=10, ef=32, variant="acorn-gamma", m=8, m_beta=16,
+              buckets=(16,), cache=VariantCache())
+    ids0, d0, _ = search_batch(g, ds.x, wl.xq, masks, use_kernel=False, **kw)
+    ids1, d1, _ = search_batch(g, ds.x, wl.xq, masks, use_kernel=True,
+                               interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-4)
+
+
+def test_search_batch_unfiltered_masks_none(ds, wl, graphs):
+    g = graphs["hnsw"]
+    ids, d, _ = search_batch(g, ds.x, wl.xq, None, k=10, ef=32,
+                             variant="hnsw", m=8, m_beta=0,
+                             compressed_level0=False, buckets=(16,),
+                             cache=VariantCache())
+    assert ids.shape == (N_RAGGED, 10)
+    assert (np.asarray(ids)[:, 0] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# compiled-variant cache accounting
+# ---------------------------------------------------------------------------
+
+
+def test_variant_cache_one_trace_per_bucket(ds, wl, graphs):
+    g = graphs["acorn-gamma"]
+    masks = wl.masks(ds)
+    cache = VariantCache()
+    kw = dict(k=10, ef=32, variant="acorn-gamma", m=8, m_beta=16,
+              buckets=(16, 64), cache=cache)
+    search_batch(g, ds.x, wl.xq, masks, **kw)  # 37 -> 16 + 16 + pad(5->16)
+    assert cache.bucket_traces() == {16: 1}
+    # repeat: every shape hits the cache, zero new traces
+    search_batch(g, ds.x, wl.xq, masks, **kw)
+    assert cache.bucket_traces() == {16: 1}
+    assert cache.num_traces == 1
+    # a larger request opens the 64-bucket exactly once
+    big_wl = make_workload(ds, kind="equals", n_queries=100, k=10, seed=2,
+                           card=6)
+    search_batch(g, ds.x, big_wl.xq, big_wl.masks(ds), **kw)
+    assert cache.bucket_traces() == {16: 1, 64: 1}
+    # different ef -> a distinct variant, honestly accounted
+    search_batch(g, ds.x, wl.xq, masks, k=10, ef=64, variant="acorn-gamma",
+                 m=8, m_beta=16, buckets=(16, 64), cache=cache)
+    assert cache.bucket_traces() == {16: 2, 64: 1}
+
+
+def test_hybrid_index_serving_does_not_retrace(ds, wl):
+    cfg = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32,
+                      buckets=(16, 64))
+    idx = HybridIndex.build(ds.x, ds.table, cfg, seed=0)
+    # ragged request sizes, twice each: steady state must not mint shapes
+    for size in (5, 17, 37, 5, 17, 37):
+        ids, _, _ = idx.search(wl.xq[:size], wl.predicates[:size], k=10)
+        assert ids.shape == (size, 10)
+    traces = idx.cache.bucket_traces()
+    assert set(traces) <= {16, 64}
+    assert all(v == 1 for v in traces.values()), traces

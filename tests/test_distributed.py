@@ -70,9 +70,10 @@ x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
 def f(x):
     out, err = compressed_psum(x, "data")
     return out, err
-out, err = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
-                         out_specs=(P("data", None), P("data", None)),
-                         check_vma=False)(x)
+from repro.compat import shard_map
+out, err = shard_map(f, mesh=mesh, in_specs=P("data", None),
+                     out_specs=(P("data", None), P("data", None)),
+                     check_vma=False)(x)
 # per data-group mean over 4 shards
 xs = np.asarray(x).reshape(4, 2, 64)
 want = xs.mean(axis=0, keepdims=True).repeat(4, 0).reshape(8, 64)

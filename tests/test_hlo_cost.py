@@ -14,13 +14,19 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
+def _xla_cost(c):
+    """compiled.cost_analysis() returns a dict (new jax) or [dict] (0.4.x)."""
+    ca = c.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_matches_xla_on_loop_free():
     def f(x, w):
         return jnp.tanh(x @ w)
 
     c = _compile(f, X, X)
     mine = analyze_hlo(c.as_text())
-    xla = c.cost_analysis()
+    xla = _xla_cost(c)
     assert abs(mine.flops - xla["flops"]) / xla["flops"] < 0.05
     assert abs(mine.bytes - xla["bytes accessed"]) / \
         xla["bytes accessed"] < 0.25
@@ -36,8 +42,8 @@ def test_xla_counts_loop_body_once_we_dont():
                             length=8)[0]
 
     c1, c8 = _compile(one, X, X), _compile(scanned, X, X)
-    assert c8.cost_analysis()["flops"] == pytest.approx(
-        c1.cost_analysis()["flops"])          # XLA: body counted once
+    assert _xla_cost(c8)["flops"] == pytest.approx(
+        _xla_cost(c1)["flops"])               # XLA: body counted once
     m1, m8 = analyze_hlo(c1.as_text()), analyze_hlo(c8.as_text())
     assert m8.flops / m1.flops == pytest.approx(8.0, rel=0.05)
 
@@ -95,8 +101,9 @@ def f(x):
         return c + 0 * s, None
     return jax.lax.scan(body, x, None, length=5)[0]
 
-g = jax.shard_map(f, mesh=mesh, in_specs=P(None, "d"), out_specs=P(None, "d"),
-                  check_vma=False)
+from repro.compat import shard_map
+g = shard_map(f, mesh=mesh, in_specs=P(None, "d"), out_specs=P(None, "d"),
+              check_vma=False)
 c = jax.jit(g).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
 cost = analyze_hlo(c.as_text())
 ar = cost.coll.get("all-reduce", {"count": 0})
