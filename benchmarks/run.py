@@ -25,6 +25,7 @@ MODULES = [
     ("fig12_pruning", "Fig 12: pruning ablation"),
     ("fig13_graph_quality", "Fig 13: predicate-subgraph quality"),
     ("bench_batched_search", "Batched search: jit buckets x kernel QPS"),
+    ("bench_sharded_search", "Sharded search: device-count x batch QPS"),
 ]
 
 

@@ -6,9 +6,10 @@ from .predicates import (AttributeTable, Predicate, Equals, OneOf, Between,
 from .graph import LayeredGraph, assign_levels, neighbor_rows, memory_bytes
 from .bruteforce import masked_topk, ground_truth, recall_at_k, pairwise_sq_l2
 from .build import build_acorn_gamma, build_acorn_1, build_hnsw, build_bulk
-from .search import hybrid_search, ann_search, SearchStats, get_neighbors
-from .batched import (DEFAULT_BUCKETS, VariantCache, plan_chunks,
-                      search_batch)
+from .search import (hybrid_search, hybrid_search_sharded, ann_search,
+                     SearchStats, get_neighbors)
+from .batched import (DEFAULT_BUCKETS, VariantCache, mesh_buckets,
+                      plan_chunks, search_batch)
 from .baselines import (prefilter_search, postfilter_search,
                         OraclePartitionIndex)
 from .index import AcornConfig, HybridIndex
@@ -21,9 +22,10 @@ __all__ = [
     "pack_multihot", "LayeredGraph", "assign_levels", "neighbor_rows",
     "memory_bytes", "masked_topk", "ground_truth", "recall_at_k",
     "pairwise_sq_l2", "build_acorn_gamma", "build_acorn_1", "build_hnsw",
-    "build_bulk", "hybrid_search", "ann_search", "SearchStats",
-    "get_neighbors", "DEFAULT_BUCKETS", "VariantCache", "plan_chunks",
-    "search_batch", "prefilter_search", "postfilter_search",
+    "build_bulk", "hybrid_search", "hybrid_search_sharded", "ann_search",
+    "SearchStats",
+    "get_neighbors", "DEFAULT_BUCKETS", "VariantCache", "mesh_buckets",
+    "plan_chunks", "search_batch", "prefilter_search", "postfilter_search",
     "OraclePartitionIndex", "AcornConfig", "HybridIndex",
     "query_correlation",
 ]

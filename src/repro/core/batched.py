@@ -33,18 +33,42 @@ DEFAULT_BUCKETS: Tuple[int, ...] = (1, 16, 64, 256)
 DISPATCH_COST_QUERIES = 4
 
 
-def plan_chunks(total: int, buckets: Tuple[int, ...]) -> List[Tuple[int, int]]:
+def mesh_buckets(buckets: Tuple[int, ...],
+                 multiple_of: int) -> Tuple[int, ...]:
+    """Round each jit bucket up to a multiple of the mesh size and dedup.
+
+    {1, 16, 64, 256} on an 8-device mesh becomes {8, 16, 64, 256}: every
+    padded launch splits evenly across devices.  The single source of truth
+    for device-count-aware bucket shapes — ``plan_chunks`` plans in these.
+    """
+    bs = sorted(set(int(b) for b in buckets))
+    if multiple_of <= 1:
+        return tuple(bs)
+    return tuple(sorted(set(
+        -(-b // multiple_of) * multiple_of for b in bs)))
+
+
+def plan_chunks(total: int, buckets: Tuple[int, ...],
+                multiple_of: int = 1) -> List[Tuple[int, int]]:
     """Split ``total`` queries into (take, bucket) chunks.
 
     Greedy: each step picks the bucket minimizing padded-compute plus the
     dispatch penalty for the remaining queries; ties prefer the larger
     bucket (fewer launches).
+
+    ``multiple_of`` (the data-parallel mesh size) rounds every bucket up to
+    a mesh multiple first (:func:`mesh_buckets`), so each padded launch
+    splits evenly across devices: {1, 16, 64} on an 8-device mesh plans in
+    {8, 16, 64}.
     """
     if total < 0:
         raise ValueError(total)
+    if multiple_of < 1:
+        raise ValueError(f"invalid multiple_of {multiple_of}")
     bs = sorted(set(int(b) for b in buckets))
     if not bs or bs[0] < 1:
         raise ValueError(f"invalid buckets {buckets}")
+    bs = list(mesh_buckets(bs, multiple_of))
     chunks: List[Tuple[int, int]] = []
     rem = total
     while rem > 0:
@@ -93,12 +117,21 @@ class VariantCache:
 _DEFAULT_CACHE = VariantCache()
 
 
-def _build_variant(cache: VariantCache, key: tuple,
-                   statics: dict) -> Callable:
+def _build_variant(cache: VariantCache, key: tuple, statics: dict,
+                   has_mask: bool, data_parallel: int = 1) -> Callable:
+    if data_parallel > 1:
+        # shard_map dispatch across the local 'data' mesh; queries + masks
+        # sharded, graph/vectors replicated (distributed/query_parallel.py)
+        from repro.distributed.query_parallel import sharded_search_fn
+        impl = sharded_search_fn(data_parallel, has_mask, statics)
+    else:
+        def impl(graph, x, xq, masks):
+            return _search_impl(graph, x, xq, masks, **statics)
+
     def fn(graph, x, xq, masks):
         # runs only while tracing -> counts real (re)compilations
         cache.trace_counts[key] = cache.trace_counts.get(key, 0) + 1
-        return _search_impl(graph, x, xq, masks, **statics)
+        return impl(graph, x, xq, masks)
 
     return jax.jit(fn)
 
@@ -127,17 +160,36 @@ def search_batch(
     interpret: bool = True,
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
     cache: Optional[VariantCache] = None,
+    data_parallel: Optional[int] = 1,
 ) -> Tuple[Array, Array, SearchStats]:
     """Ragged-batch hybrid search through jit buckets.
 
     Identical results to :func:`repro.core.search.hybrid_search` on the same
     queries (padding lanes are discarded), but any request size dispatches
     into a handful of fixed shapes.  ``pass_masks=None`` runs the unfiltered
-    substrate (``variant='hnsw'`` semantics of :func:`ann_search`).
+    substrate (``variant='hnsw'`` semantics of :func:`ann_search`) for every
+    variant — the predicate-aware lookup strategies need a mask, so without
+    one the traversal degrades to the plain-HNSW neighbor scan.
+
+    ``data_parallel`` > 1 shards each bucket's queries across that many
+    local devices (clamped to the host's device count) via the shard_map
+    dispatch in ``repro.distributed.query_parallel``; bucket sizes are
+    rounded up to mesh-size multiples and results stay bit-identical to the
+    single-device path.
 
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     cache = _DEFAULT_CACHE if cache is None else cache
+    if pass_masks is None:
+        # documented unfiltered fallback: without a predicate mask the
+        # filter/compress/two_hop strategies are undefined (they index the
+        # mask), so every variant runs the plain-HNSW substrate
+        variant = "hnsw"
+        compressed_level0 = False
+    dp = 1
+    if data_parallel != 1:  # None / 0 -> all local devices; N -> min(N, ndev)
+        from repro.distributed.query_parallel import resolve_data_parallel
+        dp = resolve_data_parallel(data_parallel)
     total = xq.shape[0]
     if total == 0:
         z = jnp.zeros((0,), jnp.int32)
@@ -149,7 +201,7 @@ def search_batch(
                    interpret=interpret)
     outs: List[Tuple[Array, Array, Array, Array]] = []
     start = 0
-    for take, bucket in plan_chunks(total, buckets):
+    for take, bucket in plan_chunks(total, buckets, multiple_of=dp):
         q = xq[start:start + take]
         msk = None if pass_masks is None else pass_masks[start:start + take]
         if take < bucket:
@@ -157,8 +209,9 @@ def search_batch(
             if msk is not None:
                 msk = pad_rows(msk, bucket - take)
         key = (bucket, k, ef, variant, m, m_beta, metric, compressed_level0,
-               max_expansions, use_kernel, interpret, msk is not None)
-        fn = cache.get(key, lambda: _build_variant(cache, key, statics))
+               max_expansions, use_kernel, interpret, msk is not None, dp)
+        fn = cache.get(key, lambda: _build_variant(
+            cache, key, statics, has_mask=msk is not None, data_parallel=dp))
         ids, d, stats = fn(graph, x, q, msk)
         outs.append((ids[:take], d[:take], stats.dist_comps[:take],
                      stats.hops[:take]))

@@ -39,6 +39,9 @@ class AcornConfig:
     use_kernel: bool = False           # gather_distance Pallas kernel
     interpret: bool = True             # interpret=True runs the kernel on CPU
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS  # jit batch buckets
+    # query-data-parallel devices for the graph route: 1 = single device,
+    # None/0 = all local devices, N = min(N, local device count)
+    data_parallel: Optional[int] = 1
 
     @property
     def s_min(self) -> float:
@@ -98,6 +101,7 @@ class HybridIndex:
         force_route: Optional[str] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        data_parallel: Optional[int] = None,
     ) -> Tuple[Array, Array, dict]:
         """Batched hybrid search with per-query cost-based routing.
 
@@ -105,7 +109,9 @@ class HybridIndex:
         graph route via :func:`repro.core.batched.search_batch` (with this
         index's compiled-variant cache), the pre-filter route through the
         same bucket padding — so ragged request sizes never re-trace.
-        ``use_kernel``/``interpret`` override the config knobs per call.
+        ``use_kernel``/``interpret``/``data_parallel`` override the config
+        knobs per call (``None`` defers to the config; pass
+        ``data_parallel=0`` to request all local devices explicitly).
 
         Returns (ids (B,k), dists (B,k), info) where info records the route
         taken per query and search stats.
@@ -114,6 +120,8 @@ class HybridIndex:
         ef = ef or cfg.ef_search
         use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
         interpret = cfg.interpret if interpret is None else interpret
+        data_parallel = (cfg.data_parallel if data_parallel is None
+                         else data_parallel)
         masks = evaluate_batch(predicates, self.table)  # (B, n)
         s_est = np.array([self.sketch.estimate(p) for p in predicates])
         if force_route == "graph":
@@ -154,7 +162,8 @@ class HybridIndex:
                 metric=cfg.metric,
                 compressed_level0=cfg.compress and variant == "acorn-gamma",
                 max_expansions=cfg.max_expansions, use_kernel=use_kernel,
-                interpret=interpret, buckets=cfg.buckets, cache=self.cache)
+                interpret=interpret, buckets=cfg.buckets, cache=self.cache,
+                data_parallel=data_parallel)
             out_ids[gr_idx] = np.asarray(ids)
             out_d[gr_idx] = np.asarray(d)
             dist_comps[gr_idx] = np.asarray(stats.dist_comps)

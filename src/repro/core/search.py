@@ -385,6 +385,66 @@ def hybrid_search(
         compressed_level0, max_expansions, use_kernel, interpret)
 
 
+# mesh-aware variants: one jitted shard_map callable per (mesh, config)
+_SHARDED_FNS: dict = {}
+
+
+def hybrid_search_sharded(
+    graph: LayeredGraph,
+    x: Array,
+    xq: Array,
+    pass_mask: Optional[Array],
+    data_parallel: Optional[int] = None,
+    k: int = 10,
+    ef: int = 64,
+    variant: str = "acorn-gamma",
+    m: int = 16,
+    m_beta: int = 32,
+    metric: str = "l2",
+    compressed_level0: bool = True,
+    max_expansions: int = 512,
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
+    """Mesh-aware :func:`hybrid_search`: queries sharded across devices.
+
+    Shards ``xq``/``pass_mask`` over a 1-D ``data`` mesh of
+    ``data_parallel`` local devices (``None`` -> all of them; clamped to
+    the host's device count) with the graph and vectors replicated, via
+    ``repro.distributed.query_parallel``.  ``xq`` is padded up to a mesh
+    multiple (padding lanes discarded), and results are bit-identical to
+    the single-device path.  ``pass_mask=None`` runs the unfiltered
+    plain-HNSW substrate, as in :func:`repro.core.batched.search_batch`.
+    """
+    from repro.distributed.query_parallel import (pad_to_multiple,
+                                                  resolve_data_parallel,
+                                                  sharded_search_fn)
+    if pass_mask is None:
+        variant, compressed_level0 = "hnsw", False
+    statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
+                   metric=metric, compressed_level0=compressed_level0,
+                   max_expansions=max_expansions, use_kernel=use_kernel,
+                   interpret=interpret)
+    dp = resolve_data_parallel(data_parallel)
+    b = xq.shape[0]
+    if dp <= 1 or b == 0:
+        return hybrid_search(graph, x, xq, pass_mask, **statics)
+    key = (dp, pass_mask is not None, tuple(sorted(statics.items())))
+    fn = _SHARDED_FNS.get(key)
+    if fn is None:
+        fn = _SHARDED_FNS[key] = jax.jit(
+            sharded_search_fn(dp, pass_mask is not None, statics))
+    pb = pad_to_multiple(b, dp)
+    if pb != b:
+        from repro.core.batched import pad_rows
+        xq = pad_rows(xq, pb - b)
+        if pass_mask is not None:
+            pass_mask = pad_rows(pass_mask, pb - b)
+    ids, d, st = fn(graph, x, xq, pass_mask)
+    return ids[:b], d[:b], SearchStats(dist_comps=st.dist_comps[:b],
+                                       hops=st.hops[:b])
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "ef", "m", "metric", "max_expansions", "use_kernel",

@@ -1,0 +1,10 @@
+"""Distributed execution: sharding rules, collectives, query parallelism."""
+from repro.core.batched import mesh_buckets
+
+from .query_parallel import (data_mesh, local_device_count,
+                             resolve_data_parallel, sharded_search_fn)
+
+__all__ = [
+    "data_mesh", "local_device_count", "mesh_buckets",
+    "resolve_data_parallel", "sharded_search_fn",
+]

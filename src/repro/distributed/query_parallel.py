@@ -1,0 +1,112 @@
+"""Query-data-parallel dispatch: shard_map execution of hybrid search.
+
+The batched pipeline (PR 1) runs every jit bucket on a single device; this
+module shards a bucket's queries across a 1-D ``data`` mesh of local
+devices (GSPMD via :func:`repro.compat.shard_map`):
+
+  * queries ``xq`` and predicate ``pass_masks`` are sharded on ``data``;
+  * the graph pytree and the vector table are replicated;
+  * each device runs its own independent ``while_loop``, so a converged
+    device's lanes stop paying for a straggler device's hops — the
+    lock-step convergence waste a single-device batch-256 launch pays
+    (every iteration costs all 256 lanes until the *slowest* lane stops).
+
+Results are bit-identical to the single-device path: per-lane carries are
+frozen on convergence (the vmap-of-while_loop contract in
+``core/search.py``), so a query's ids/dists/stats never depend on which
+other queries share its device.  Bucket sizes must be multiples of the
+mesh size — ``core/batched.py::plan_chunks(multiple_of=...)`` guarantees
+this for the jit-bucketed dispatch.
+
+Local testing recipe (XLA fixes the host device count at first init):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_query_parallel.py
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.search import SearchStats, _search_impl
+
+Array = jax.Array
+
+# mesh cache: building a Mesh is cheap but identity matters for jit cache
+# hits, so hand back the same object per (size, device-ids) request
+_MESHES: Dict[tuple, Mesh] = {}
+
+
+def local_device_count() -> int:
+    return jax.local_device_count()
+
+
+def resolve_data_parallel(requested: Optional[int]) -> int:
+    """Clamp a data-parallel request to the local device count.
+
+    ``None``/``0`` mean "all local devices"; 1 selects the single-device
+    path; anything larger is capped at what the host actually has.
+    """
+    ndev = local_device_count()
+    if not requested:
+        return ndev
+    return max(1, min(int(requested), ndev))
+
+
+def data_mesh(dp: int) -> Mesh:
+    """A 1-D mesh over the first ``dp`` local devices, axis name 'data'.
+
+    Local (process-addressable) devices, matching the
+    :func:`resolve_data_parallel` clamp — in a multi-process run
+    ``jax.devices()`` is globally ordered and could hand this process a
+    mesh of devices it cannot address.
+    """
+    devs = jax.local_devices()[:dp]
+    if len(devs) < dp:
+        raise ValueError(
+            f"data_parallel={dp} but only {len(devs)} local devices")
+    key = (dp, tuple(d.id for d in devs))
+    mesh = _MESHES.get(key)
+    if mesh is None:
+        mesh = _MESHES[key] = Mesh(np.asarray(devs), ("data",))
+    return mesh
+
+
+def sharded_search_fn(dp: int, has_mask: bool,
+                      statics: dict) -> Callable:
+    """Build the shard_map'd search callable for one compiled variant.
+
+    Returns ``f(graph, x, xq, masks)`` with the same signature/results as
+    ``_search_impl(graph, x, xq, masks, **statics)`` but with queries (and
+    masks, when present) split along a ``data`` mesh axis.  ``xq.shape[0]``
+    must be a multiple of ``dp``.  Intended to be wrapped in ``jax.jit``
+    by the caller (the variant cache), like the single-device variants.
+    """
+    mesh = data_mesh(dp)
+    rep = P()  # replicated — prefix-broadcast over the graph pytree
+    out_specs = (P("data"), P("data"),
+                 SearchStats(dist_comps=P("data"), hops=P("data")))
+
+    if has_mask:
+        def local(graph, x, xq, masks):
+            return _search_impl(graph, x, xq, masks, **statics)
+
+        return shard_map(local, mesh,
+                         in_specs=(rep, rep, P("data"), P("data")),
+                         out_specs=out_specs, check_vma=False)
+
+    def local_nomask(graph, x, xq):
+        return _search_impl(graph, x, xq, None, **statics)
+
+    f = shard_map(local_nomask, mesh, in_specs=(rep, rep, P("data")),
+                  out_specs=out_specs, check_vma=False)
+    return lambda graph, x, xq, masks: f(graph, x, xq)
+
+
+def pad_to_multiple(total: int, dp: int) -> int:
+    """Smallest multiple of ``dp`` that is >= ``total``."""
+    return ((total + dp - 1) // dp) * dp

@@ -1,1 +1,1 @@
-from .engine import ServingEngine, EngineConfig
+from .engine import ServingEngine, EngineConfig, merge_topk

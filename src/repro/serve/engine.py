@@ -7,6 +7,10 @@ Operational wrapper around HybridIndex for production serving:
     (``repro.core.batched.search_batch`` via ``HybridIndex.search``), so a
     ragged request stream runs against a handful of compiled shapes and the
     engine never re-traces per request shape;
+  * query data parallelism — ``EngineConfig.data_parallel`` shards each
+    batch's queries across local devices inside every index shard
+    (``repro.distributed.query_parallel``; ``None`` defers to the
+    AcornConfig knob);
   * per-query cost-based routing (ACORN graph vs pre-filter, §5.2) — done
     inside HybridIndex; the engine exposes route statistics;
   * straggler mitigation — in the multi-host layout each corpus shard is a
@@ -39,6 +43,7 @@ class EngineConfig:
     duplicate_dispatch: bool = False  # straggler mitigation (mirrored shards)
     use_kernel: Optional[bool] = None  # None -> AcornConfig knob
     interpret: Optional[bool] = None
+    data_parallel: Optional[int] = None  # None -> AcornConfig knob; 0 = all
 
 
 @dataclasses.dataclass
@@ -46,6 +51,23 @@ class _Shard:
     index: HybridIndex
     base: int                  # global id offset
     healthy: bool = True
+
+
+def merge_topk(ids, d, k: int):
+    """Deterministic cross-shard top-k merge.
+
+    Sorts each row of the concatenated per-shard candidates by
+    (distance, global id): the stable lexicographic order makes the merge
+    independent of shard arrival/iteration order, so equal-distance results
+    from different shards (and duplicate-dispatch mirrors) always resolve
+    the same way.  Invalid candidates carry ``inf`` distance and sort last;
+    they come back as id ``-1``.
+    """
+    order = jnp.lexsort((ids, d), axis=1)[:, :k]
+    out_d = jnp.take_along_axis(d, order, axis=1)
+    out_ids = jnp.where(jnp.isfinite(out_d),
+                        jnp.take_along_axis(ids, order, axis=1), -1)
+    return out_ids, out_d
 
 
 class ServingEngine:
@@ -83,11 +105,16 @@ class ServingEngine:
             result = None
             for attempt in range(mirrors):
                 if not shard.healthy and attempt == 0:
-                    self.stats["duplicated_dispatches"] += 1
+                    if mirrors > 1:
+                        # only count an actual mirror dispatch; without
+                        # duplicate_dispatch the unhealthy primary simply
+                        # drops out and no duplicate work happens
+                        self.stats["duplicated_dispatches"] += 1
                     continue  # primary "failed"; mirror answers
                 ids, d, info = shard.index.search(
                     xq, predicates, k=cfg.k, ef=cfg.ef,
-                    use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+                    use_kernel=cfg.use_kernel, interpret=cfg.interpret,
+                    data_parallel=cfg.data_parallel)
                 result = (ids, d, info)
                 break
             if result is None:  # all mirrors down -> shard contributes none
@@ -100,15 +127,16 @@ class ServingEngine:
                 (info["routes"] == "prefilter").sum())
             self.stats["graph_routed"] += int(
                 (info["routes"] == "graph").sum())
-        ids = jnp.concatenate(all_ids, axis=1)
-        d = jnp.concatenate(all_d, axis=1)
-        order = jnp.argsort(d, axis=1)[:, :cfg.k]
-        out_ids = jnp.take_along_axis(ids, order, axis=1)
-        out_d = jnp.take_along_axis(d, order, axis=1)
-        out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
         self.stats["queries"] += b
         self.stats["batches"] += 1
-        return out_ids, out_d
+        if not all_ids:
+            # every shard (and mirror) down: degrade to an empty result set
+            # instead of crashing the serving path — availability first
+            return (jnp.full((b, cfg.k), -1, jnp.int32),
+                    jnp.full((b, cfg.k), jnp.inf, jnp.float32))
+        ids = jnp.concatenate(all_ids, axis=1)
+        d = jnp.concatenate(all_d, axis=1)
+        return merge_topk(ids, d, cfg.k)
 
     # ------------------------------------------------------------------
     def serve(self, xq, predicates: Sequence[Predicate]):

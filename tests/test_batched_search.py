@@ -107,6 +107,25 @@ def test_search_batch_unfiltered_masks_none(ds, wl, graphs):
     assert (np.asarray(ids)[:, 0] >= 0).all()
 
 
+@pytest.mark.parametrize("variant", ["acorn-gamma", "acorn-1"])
+def test_search_batch_masks_none_acorn_variant_falls_back(ds, wl, graphs,
+                                                          variant):
+    """Regression: pass_masks=None with an ACORN variant used to crash
+    (the 'filter' strategy dereferenced pass_mask.shape on None) instead of
+    running the documented unfiltered 'hnsw' semantics."""
+    g = graphs[variant]
+    ids, d, _ = search_batch(g, ds.x, wl.xq, None, k=10, ef=32,
+                             variant=variant, m=8, m_beta=16, buckets=(16,),
+                             cache=VariantCache())
+    ids_h, d_h, _ = search_batch(g, ds.x, wl.xq, None, k=10, ef=32,
+                                 variant="hnsw", m=8, m_beta=16,
+                                 compressed_level0=False, buckets=(16,),
+                                 cache=VariantCache())
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_h))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_h), rtol=1e-6)
+    assert (np.asarray(ids)[:, 0] >= 0).all()
+
+
 # ---------------------------------------------------------------------------
 # compiled-variant cache accounting
 # ---------------------------------------------------------------------------

@@ -1,0 +1,157 @@
+"""Query-data-parallel dispatch: mesh bucket planning + 8-device parity.
+
+The shard_map path needs multiple devices; jax fixes the device count at
+first init, so (like test_distributed.py) the mesh parity suite runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.  The
+planner/clamping tests run in-process on however many devices exist.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import plan_chunks
+from repro.distributed import mesh_buckets, resolve_data_parallel
+
+
+# ---------------------------------------------------------------------------
+# in-process: device-count-aware planning + clamping
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chunks_mesh_multiple_rounds_buckets_up():
+    # {16, 64} stay multiples of 8; the unit bucket rounds up to 8
+    assert plan_chunks(37, (16, 64), multiple_of=8) == [(16, 16), (16, 16),
+                                                        (5, 16)]
+    assert plan_chunks(1, (1, 16, 64), multiple_of=8) == [(1, 8)]
+    assert plan_chunks(0, (16, 64), multiple_of=8) == []
+
+
+def test_plan_chunks_mesh_multiple_dedups_colliding_buckets():
+    # 1 and 5 both round to 8: planner sees {8, 64}
+    assert plan_chunks(6, (1, 5, 64), multiple_of=8) == [(6, 8)]
+
+
+def test_mesh_buckets():
+    assert mesh_buckets((1, 16, 64, 256), 8) == (8, 16, 64, 256)
+    assert mesh_buckets((1, 16, 64, 256), 1) == (1, 16, 64, 256)
+    assert mesh_buckets((3, 5), 4) == (4, 8)
+
+
+def test_resolve_data_parallel_clamps_to_local_devices():
+    import jax
+    ndev = jax.local_device_count()
+    assert resolve_data_parallel(None) == ndev
+    assert resolve_data_parallel(0) == ndev
+    assert resolve_data_parallel(1) == 1
+    assert resolve_data_parallel(10 ** 6) == ndev
+
+
+def test_search_batch_clamps_oversized_data_parallel():
+    """data_parallel beyond the host's devices degrades to what exists —
+    on a single-device host that is exactly the unsharded path."""
+    import jax
+    from repro.core import VariantCache, build_acorn_gamma, search_batch
+    from repro.data import make_lcps_dataset, make_workload
+    ds = make_lcps_dataset(n=600, d=8, card=4, seed=0)
+    wl = make_workload(ds, kind="equals", n_queries=9, k=5, seed=1, card=4)
+    masks = wl.masks(ds)
+    g = build_acorn_gamma(ds.x, jax.random.PRNGKey(0), M=8, gamma=4,
+                          m_beta=16)
+    kw = dict(k=5, ef=16, variant="acorn-gamma", m=8, m_beta=16,
+              buckets=(16,))
+    ids1, d1, _ = search_batch(g, ds.x, wl.xq, masks, cache=VariantCache(),
+                               data_parallel=1, **kw)
+    cache = VariantCache()
+    ids2, d2, _ = search_batch(g, ds.x, wl.xq, masks, cache=cache,
+                               data_parallel=2 * jax.local_device_count(),
+                               **kw)
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    # cache keys carry the *resolved* device count
+    assert all(key[-1] == jax.local_device_count() for key in cache.fns)
+
+
+# ---------------------------------------------------------------------------
+# subprocess: 8-device CPU mesh parity
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+assert jax.local_device_count() == 8
+
+from repro.core import (AcornConfig, VariantCache, build_acorn_gamma,
+                        hybrid_search, hybrid_search_sharded, search_batch)
+from repro.data import make_lcps_dataset, make_workload
+from repro.serve import EngineConfig, ServingEngine
+
+ds = make_lcps_dataset(n=1200, d=12, card=6, seed=0)
+wl = make_workload(ds, kind="equals", n_queries=37, k=10, seed=1, card=6)
+masks = wl.masks(ds)
+g = build_acorn_gamma(ds.x, jax.random.PRNGKey(0), M=8, gamma=6, m_beta=16)
+kw = dict(k=10, ef=32, variant="acorn-gamma", m=8, m_beta=16)
+
+# ---- sharded search_batch == single-device search_batch, bit-identical ----
+ids1, d1, st1 = search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64),
+                             cache=VariantCache(), data_parallel=1, **kw)
+c8 = VariantCache()
+ids8, d8, st8 = search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64),
+                             cache=c8, data_parallel=8, **kw)
+np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids8))
+np.testing.assert_array_equal(np.asarray(d1), np.asarray(d8))
+np.testing.assert_array_equal(np.asarray(st1.dist_comps),
+                              np.asarray(st8.dist_comps))
+np.testing.assert_array_equal(np.asarray(st1.hops), np.asarray(st8.hops))
+
+# one trace per bucket, dp recorded in the key, steady state mints nothing
+assert c8.bucket_traces() == {16: 1}, c8.bucket_traces()
+assert all(key[-1] == 8 for key in c8.fns)
+search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64), cache=c8,
+             data_parallel=8, **kw)
+assert c8.num_traces == 1
+
+# ---- mesh-aware entry: ragged B padded to a mesh multiple ----
+idsS, dS, stS = hybrid_search_sharded(g, ds.x, wl.xq, masks,
+                                      data_parallel=8, **kw)
+idsH, dH, stH = hybrid_search(g, ds.x, wl.xq, masks, **kw)
+np.testing.assert_array_equal(np.asarray(idsS), np.asarray(idsH))
+np.testing.assert_allclose(np.asarray(dS), np.asarray(dH), rtol=1e-6)
+np.testing.assert_array_equal(np.asarray(stS.dist_comps),
+                              np.asarray(stH.dist_comps))
+
+# ---- unfiltered (masks=None) sharded path ----
+iN1, dN1, _ = search_batch(g, ds.x, wl.xq, None, buckets=(16,),
+                           cache=VariantCache(), data_parallel=1, **kw)
+iN8, dN8, _ = search_batch(g, ds.x, wl.xq, None, buckets=(16,),
+                           cache=VariantCache(), data_parallel=8, **kw)
+np.testing.assert_array_equal(np.asarray(iN1), np.asarray(iN8))
+
+# ---- EngineConfig.data_parallel end-to-end ----
+acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32, buckets=(16, 64))
+e1 = ServingEngine(ds.x, ds.table, acorn,
+                   EngineConfig(batch_size=16, k=10, n_shards=2))
+e8 = ServingEngine(ds.x, ds.table, acorn,
+                   EngineConfig(batch_size=16, k=10, n_shards=2,
+                                data_parallel=8))
+ids_e1, d_e1 = e1.serve(wl.xq, wl.predicates)
+ids_e8, d_e8 = e8.serve(wl.xq, wl.predicates)
+np.testing.assert_array_equal(np.asarray(ids_e1), np.asarray(ids_e8))
+np.testing.assert_array_equal(np.asarray(d_e1), np.asarray(d_e8))
+
+print("QUERY_PARALLEL_OK")
+"""
+
+
+def test_sharded_search_parity_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "QUERY_PARALLEL_OK" in r.stdout
