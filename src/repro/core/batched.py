@@ -158,6 +158,7 @@ def search_batch(
     max_expansions: int = 512,
     use_kernel: bool = False,
     interpret: bool = True,
+    expand_kernel: Optional[bool] = None,
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
     cache: Optional[VariantCache] = None,
     data_parallel: Optional[int] = 1,
@@ -177,9 +178,14 @@ def search_batch(
     rounded up to mesh-size multiples and results stay bit-identical to the
     single-device path.
 
+    ``expand_kernel`` routes the fused neighbor expansion through its
+    Pallas kernel (``None`` follows ``use_kernel``); the resolved value is
+    part of the compiled-variant cache key, like ``use_kernel``.
+
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     cache = _DEFAULT_CACHE if cache is None else cache
+    expand_kernel = use_kernel if expand_kernel is None else expand_kernel
     if pass_masks is None:
         # documented unfiltered fallback: without a predicate mask the
         # filter/compress/two_hop strategies are undefined (they index the
@@ -198,7 +204,7 @@ def search_batch(
     statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
                    metric=metric, compressed_level0=compressed_level0,
                    max_expansions=max_expansions, use_kernel=use_kernel,
-                   interpret=interpret)
+                   interpret=interpret, expand_kernel=expand_kernel)
     outs: List[Tuple[Array, Array, Array, Array]] = []
     start = 0
     for take, bucket in plan_chunks(total, buckets, multiple_of=dp):
@@ -209,7 +215,8 @@ def search_batch(
             if msk is not None:
                 msk = pad_rows(msk, bucket - take)
         key = (bucket, k, ef, variant, m, m_beta, metric, compressed_level0,
-               max_expansions, use_kernel, interpret, msk is not None, dp)
+               max_expansions, use_kernel, interpret, expand_kernel,
+               msk is not None, dp)
         fn = cache.get(key, lambda: _build_variant(
             cache, key, statics, has_mask=msk is not None, data_parallel=dp))
         ids, d, stats = fn(graph, x, q, msk)

@@ -38,6 +38,9 @@ class AcornConfig:
     # execution knobs (batched kernel-fused pipeline)
     use_kernel: bool = False           # gather_distance Pallas kernel
     interpret: bool = True             # interpret=True runs the kernel on CPU
+    # neighbor_expand Pallas kernel (fused 2-hop gather/filter/dedup/pack);
+    # None follows use_kernel
+    expand_kernel: Optional[bool] = None
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS  # jit batch buckets
     # query-data-parallel devices for the graph route: 1 = single device,
     # None/0 = all local devices, N = min(N, local device count)
@@ -101,6 +104,7 @@ class HybridIndex:
         force_route: Optional[str] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        expand_kernel: Optional[bool] = None,
         data_parallel: Optional[int] = None,
     ) -> Tuple[Array, Array, dict]:
         """Batched hybrid search with per-query cost-based routing.
@@ -109,9 +113,11 @@ class HybridIndex:
         graph route via :func:`repro.core.batched.search_batch` (with this
         index's compiled-variant cache), the pre-filter route through the
         same bucket padding — so ragged request sizes never re-trace.
-        ``use_kernel``/``interpret``/``data_parallel`` override the config
-        knobs per call (``None`` defers to the config; pass
-        ``data_parallel=0`` to request all local devices explicitly).
+        ``use_kernel``/``interpret``/``expand_kernel``/``data_parallel``
+        override the config knobs per call (``None`` defers to the config;
+        a config ``expand_kernel`` of ``None`` in turn follows
+        ``use_kernel``; pass ``data_parallel=0`` to request all local
+        devices explicitly).
 
         Returns (ids (B,k), dists (B,k), info) where info records the route
         taken per query and search stats.
@@ -120,6 +126,8 @@ class HybridIndex:
         ef = ef or cfg.ef_search
         use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
         interpret = cfg.interpret if interpret is None else interpret
+        expand_kernel = (cfg.expand_kernel if expand_kernel is None
+                         else expand_kernel)
         data_parallel = (cfg.data_parallel if data_parallel is None
                          else data_parallel)
         masks = evaluate_batch(predicates, self.table)  # (B, n)
@@ -162,7 +170,8 @@ class HybridIndex:
                 metric=cfg.metric,
                 compressed_level0=cfg.compress and variant == "acorn-gamma",
                 max_expansions=cfg.max_expansions, use_kernel=use_kernel,
-                interpret=interpret, buckets=cfg.buckets, cache=self.cache,
+                interpret=interpret, expand_kernel=expand_kernel,
+                buckets=cfg.buckets, cache=self.cache,
                 data_parallel=data_parallel)
             out_ids[gr_idx] = np.asarray(ids)
             out_d[gr_idx] = np.asarray(d)

@@ -26,6 +26,15 @@ Neighbor-lookup strategies (Figure 4):
                pruned edges), filtered, truncated to M (Fig 4b).
   'two_hop'  — full 1-hop + 2-hop expansion, filter, truncate to M
                (ACORN-1 — Fig 4c).
+
+The filter/compress/two_hop lookups run through the fused
+``repro.kernels.neighbor_expand`` subsystem: gather + predicate/visited
+filter + first-occurrence dedup + first-M pack in one op (sort-free jnp
+reference by default; a per-lane Pallas kernel behind ``expand_kernel`` /
+``use_kernel``), replacing the per-hop stable-argsort dedup of the
+flattened 2-hop candidate array.  ``first_m_true`` / ``dedup_mask`` below
+are the original single-lane primitives, kept as the spec the fused op is
+property-tested against (tests/test_search_invariants.py).
 """
 from __future__ import annotations
 
@@ -38,6 +47,7 @@ import jax.numpy as jnp
 from repro.kernels.filtered_topk.merge import bounded_sorted_merge
 from repro.kernels.gather_distance.ops import gather_distance
 from repro.kernels.gather_distance.ref import gather_distance_ref
+from repro.kernels.neighbor_expand.ops import neighbor_expand
 
 from .graph import INVALID, LayeredGraph, neighbor_rows
 
@@ -95,14 +105,23 @@ def get_neighbors(
     m: int,
     m_beta: int,
     visited: Optional[Array] = None,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Array:
     """Return up to ``m`` neighbor ids of node ``c`` for the query predicate.
 
-    ``visited`` (when given) is applied *before* the first-M truncation:
-    the M-bound exists to cap distance computations per expansion (§6.3.1
-    'Bounded Degree'); already-visited nodes cost no distance computation,
-    and truncating them away starves exploration in dense regions (visible
-    as an ACORN-1 recall plateau — EXPERIMENTS.md §Repro-notes)."""
+    ``pass_mask=None`` is accepted by every strategy and means "all nodes
+    pass" (the unfiltered substrate).  ``visited`` (when given) is applied
+    *before* the first-M truncation: the M-bound exists to cap distance
+    computations per expansion (§6.3.1 'Bounded Degree'); already-visited
+    nodes cost no distance computation, and truncating them away starves
+    exploration in dense regions (visible as an ACORN-1 recall plateau —
+    EXPERIMENTS.md §Repro-notes).
+
+    The filter/compress/two_hop lookups (Figure 4) run through the fused
+    ``repro.kernels.neighbor_expand`` op: ``use_kernel=False`` (default)
+    selects its sort-free pure-jnp reference, ``use_kernel=True`` the
+    Pallas kernel (``interpret=True`` off-TPU) — bit-identical outputs."""
     row = neighbor_rows(graph, level, c)  # (cap,)
 
     if strategy == "plain":
@@ -110,36 +129,12 @@ def get_neighbors(
         # construction); no predicate, no truncation.
         return row
 
-    def passes(ids: Array) -> Array:
-        safe = jnp.clip(ids, 0, pass_mask.shape[0] - 1)
-        ok = (ids >= 0) & pass_mask[safe]
-        if visited is not None:
-            ok = ok & ~visited[safe]
-        return ok
-
-    if strategy == "filter":
-        return first_m_true(row, passes(row), m)
-
-    if strategy == "compress":
-        head = row[:m_beta]
-        tail = row[m_beta:]
-        hop2 = neighbor_rows(graph, level, tail)  # (cap-m_beta, cap)
-        cand = jnp.concatenate(
-            [head, jnp.concatenate([tail[:, None], hop2], axis=1).reshape(-1)]
-        )
-        ok = passes(cand) & dedup_mask(cand)
-        return first_m_true(cand, ok, m)
-
-    if strategy == "two_hop":
-        hop2 = neighbor_rows(graph, level, row)  # (cap, cap)
-        # breadth-first interleave: the j-th neighbor of every 1-hop node
-        # before the (j+1)-th of any — keeps the first-M selection diverse
-        # instead of draining the nearest neighbor's list first
-        cand = jnp.concatenate([row, hop2.T.reshape(-1)])
-        ok = passes(cand) & dedup_mask(cand)
-        return first_m_true(cand, ok, m)
-
-    raise ValueError(strategy)
+    pm = None if pass_mask is None else pass_mask[None]
+    vis = None if visited is None else visited[None]
+    out = neighbor_expand(row[None], graph.neighbors[level], graph.pos[level],
+                          pm, vis, strategy=strategy, m=m, m_beta=m_beta,
+                          use_kernel=use_kernel, interpret=interpret)
+    return out[0]
 
 
 def _strategy_for(variant: str, level: int, compressed_level0: bool) -> str:
@@ -155,13 +150,19 @@ def _strategy_for(variant: str, level: int, compressed_level0: bool) -> str:
 
 
 def _batched_neighbors(graph, level, cs, pass_mask, strategy, m, m_beta,
-                       visited=None):
-    """vmap of get_neighbors over the query batch: (B,) ids -> (B, M)."""
-    fn = lambda c, pm, vis: get_neighbors(graph, level, c, pm, strategy, m,
-                                          m_beta, visited=vis)
-    ax_pm = None if pass_mask is None else 0
-    ax_vis = None if visited is None else 0
-    return jax.vmap(fn, in_axes=(0, ax_pm, ax_vis))(cs, pass_mask, visited)
+                       visited=None, use_kernel=False, interpret=True):
+    """get_neighbors over the query batch: (B,) ids -> (B, M).
+
+    Natively batched (no vmap): the whole batch's expansions issue as one
+    ``neighbor_expand`` call — one Pallas launch with a (B,) grid when
+    ``use_kernel=True``."""
+    rows = neighbor_rows(graph, level, cs)  # (B, cap)
+    if strategy == "plain":
+        return rows
+    return neighbor_expand(rows, graph.neighbors[level], graph.pos[level],
+                           pass_mask, visited, strategy=strategy, m=m,
+                           m_beta=m_beta, use_kernel=use_kernel,
+                           interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +185,8 @@ def _batch_dists(x: Array, ids: Array, xq: Array, metric: str,
 
 
 def _greedy_level(graph, x, level, e, ed, xq, pass_mask, strategy, m,
-                  m_beta, metric, max_steps, dc, use_kernel, interpret):
+                  m_beta, metric, max_steps, dc, use_kernel, interpret,
+                  expand_kernel):
     """Batched ef=1 greedy descent at one level (Algorithm 1 upper levels).
 
     e (B,) current nodes, ed (B,) their distances; lanes freeze once their
@@ -201,7 +203,8 @@ def _greedy_level(graph, x, level, e, ed, xq, pass_mask, strategy, m,
         e, ed, moved, it, dc = state
         active = lane_cond(state)
         nbrs = _batched_neighbors(graph, level, e, pass_mask, strategy, m,
-                                  m_beta)
+                                  m_beta, use_kernel=expand_kernel,
+                                  interpret=interpret)
         d = _batch_dists(x, nbrs, xq, metric, use_kernel, interpret)
         dc2 = dc + jnp.sum(nbrs >= 0, axis=1, dtype=jnp.int32)
         j = jnp.argmin(d, axis=1)
@@ -234,8 +237,14 @@ def _search_impl(
     max_expansions: int,
     use_kernel: bool,
     interpret: bool,
+    expand_kernel: Optional[bool] = None,
 ) -> Tuple[Array, Array, SearchStats]:
-    """Batched hybrid search: xq (B, d), pass_mask (B, n) or None."""
+    """Batched hybrid search: xq (B, d), pass_mask (B, n) or None.
+
+    ``expand_kernel`` routes the neighbor-expansion fusion through its
+    Pallas kernel; ``None`` follows ``use_kernel`` (one switch flips the
+    whole kernel-fused pipeline)."""
+    expand_kernel = use_kernel if expand_kernel is None else expand_kernel
     b = xq.shape[0]
     n = x.shape[0]
     top = graph.num_levels - 1
@@ -249,7 +258,7 @@ def _search_impl(
         strat = _strategy_for(variant, lvl, compressed_level0)
         e, ed, dc = _greedy_level(graph, x, lvl, e, ed, xq, pass_mask, strat,
                                   m, m_beta, metric, 128, dc, use_kernel,
-                                  interpret)
+                                  interpret, expand_kernel)
 
     # ---- level 0: beam search (Algorithm 2) ----
     strat0 = _strategy_for(variant, 0, compressed_level0)
@@ -273,7 +282,9 @@ def _search_impl(
     # step already paid in spirit; ef must simply be > m).
     if pass_mask is not None and graph.num_levels > 1 and ef > m:
         strat1 = _strategy_for(variant, 1, compressed_level0)
-        seeds = _batched_neighbors(graph, 1, e, pass_mask, strat1, m, m_beta)
+        seeds = _batched_neighbors(graph, 1, e, pass_mask, strat1, m, m_beta,
+                                   use_kernel=expand_kernel,
+                                   interpret=interpret)
         seeds = seeds[:, :m]  # 'plain' rows may be wider than m
         s = seeds.shape[1]
         sd = _batch_dists(x, seeds, xq, metric, use_kernel, interpret)
@@ -314,7 +325,8 @@ def _search_impl(
         beam_exp2 = beam_exp.at[rows, sel].set(True)
 
         nbrs = _batched_neighbors(graph, 0, c, pass_mask, strat0, m, m_beta,
-                                  visited=visited)
+                                  visited=visited, use_kernel=expand_kernel,
+                                  interpret=interpret)
         safe = jnp.clip(nbrs, 0, n - 1)
         fresh = (nbrs >= 0) & ~jnp.take_along_axis(visited, safe, axis=1)
         nd = jnp.where(fresh,
@@ -353,7 +365,7 @@ def _search_impl(
     jax.jit,
     static_argnames=("k", "ef", "variant", "m", "m_beta", "metric",
                      "compressed_level0", "max_expansions", "use_kernel",
-                     "interpret"),
+                     "interpret", "expand_kernel"),
 )
 def hybrid_search(
     graph: LayeredGraph,
@@ -370,19 +382,23 @@ def hybrid_search(
     max_expansions: int = 512,
     use_kernel: bool = False,
     interpret: bool = True,
+    expand_kernel: Optional[bool] = None,
 ):
     """Batched hybrid search.
 
     xq: (B, d) queries; pass_mask: (B, n) predicate masks.
     ``use_kernel`` routes distance computations through the gather_distance
-    Pallas kernel (``interpret=True`` for CPU execution; compiled on TPU);
-    ``use_kernel=False`` is the pure-jnp reference path — both return
-    identical neighbor ids.
+    Pallas kernel and (by default) neighbor expansion through the
+    neighbor_expand kernel (``interpret=True`` for CPU execution; compiled
+    on TPU); ``use_kernel=False`` is the pure-jnp reference path — both
+    return identical neighbor ids.  ``expand_kernel`` overrides the
+    expansion routing alone (``None`` follows ``use_kernel``).
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     return _search_impl(
         graph, x, xq, pass_mask, k, ef, variant, m, m_beta, metric,
-        compressed_level0, max_expansions, use_kernel, interpret)
+        compressed_level0, max_expansions, use_kernel, interpret,
+        expand_kernel)
 
 
 # mesh-aware variants: one jitted shard_map callable per (mesh, config)
@@ -405,6 +421,7 @@ def hybrid_search_sharded(
     max_expansions: int = 512,
     use_kernel: bool = False,
     interpret: bool = True,
+    expand_kernel: Optional[bool] = None,
 ):
     """Mesh-aware :func:`hybrid_search`: queries sharded across devices.
 
@@ -424,7 +441,9 @@ def hybrid_search_sharded(
     statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
                    metric=metric, compressed_level0=compressed_level0,
                    max_expansions=max_expansions, use_kernel=use_kernel,
-                   interpret=interpret)
+                   interpret=interpret,
+                   expand_kernel=(use_kernel if expand_kernel is None
+                                  else expand_kernel))
     dp = resolve_data_parallel(data_parallel)
     b = xq.shape[0]
     if dp <= 1 or b == 0:

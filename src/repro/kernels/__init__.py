@@ -3,6 +3,8 @@
 filtered_topk   — masked distance + exact top-k (pre-filter fallback,
                   post-filter rerank, retrieval_cand scoring)
 gather_distance — neighbor-row DMA gather + fused distance (beam search)
+neighbor_expand — fused 2-hop gather + predicate/visited filter +
+                  first-occurrence dedup + first-M pack (beam expansion)
 embedding_bag   — ragged gather + bag reduce (recsys lookup hot path)
 pna_aggregate   — fused mean/max/min/std segment aggregation (PNA GNN)
 
@@ -13,5 +15,6 @@ sweeps in tests/test_kernels.py).
 from .filtered_topk.ops import filtered_topk
 from .filtered_topk.merge import bounded_sorted_merge, bounded_sorted_merge_ref
 from .gather_distance.ops import gather_distance
+from .neighbor_expand.ops import neighbor_expand
 from .embedding_bag.ops import embedding_bag
 from .pna_aggregate.ops import pna_aggregate, pna_aggregate_segment

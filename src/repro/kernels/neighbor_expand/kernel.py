@@ -1,0 +1,222 @@
+"""Pallas TPU kernel: fused 2-hop neighbor expansion.
+
+The per-hop candidate generation of ACORN's predicate-subgraph traversal
+(Figure 4b/4c): from the 1-hop neighbor row of the node being expanded,
+gather the 2-hop rows, drop predicate-failing / visited / duplicate ids,
+and pack the first M survivors in candidate order.
+
+The jnp path materializes a ~(cap - m_beta) x (cap + 1) candidate array in
+HBM per lane and dedups it with a stable argsort (legacy) or a scatter-min
+first-occurrence pass (``ref.py``).  This kernel fuses all four steps: per
+lane it DMAs each needed 2-hop row from the HBM neighbor table straight
+into a VMEM tile (double-buffered, like ``gather_distance``) and runs one
+sequential first-occurrence scan over the candidate stream — a candidate
+packs iff it is valid, passes the predicate, is unvisited, and does not
+already sit in the (1, m) output tile (the packed set IS the dedup
+structure: once m ids are packed the scan is a no-op, so only packed ids
+can ever recur).  The flattened candidate array never exists in HBM, and
+nothing is sorted.
+
+Grid: one step per query lane.  1-hop ids and 2-hop row indices arrive via
+SMEM (they drive DMA addresses); the lane's predicate/visited bitmaps ride
+VMEM tiles indexed per candidate id — the 'onehot over node ids in VMEM'
+layout this kernel shares with the ref's scatter-min.
+
+CPU CI runs interpret mode only; the compiled lowering relies on scalar
+VMEM indexing, which Mosaic supports at reduced throughput — acceptable
+because the scan is DMA-latency-bound, not ALU-bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INVALID = -1
+
+
+def _neighbor_expand_kernel(*refs, strategy: str, m: int, n: int, n_l: int,
+                            cap: int, t: int, has_mask: bool, has_vis: bool):
+    """One query lane.  Ref layout (built by the wrapper, in order):
+
+    head_ref (1, H) SMEM       candidates scanned first
+    exp_ids_ref (1, t) SMEM    tail ids to 2-hop expand   [compress/two_hop]
+    exp_rows_ref (1, t) SMEM   their rows in the table    [compress/two_hop]
+    pm_ref (1, n) VMEM         predicate bitmap           [has_mask]
+    vis_ref (1, n) VMEM        visited bitmap             [has_vis]
+    tbl_ref (n_l, cap) ANY     level neighbor table       [compress/two_hop]
+    o_ref (1, m) VMEM          packed output ids
+    cnt_ref (1,) SMEM scratch  number packed so far
+    block_ref (t, cap) VMEM    DMA-landed 2-hop rows      [compress/two_hop]
+    sems (2,) DMA semaphores                              [compress/two_hop]
+    """
+    refs = list(refs)
+    head_ref = refs.pop(0)
+    has_exp = strategy != "filter"
+    exp_ids_ref = refs.pop(0) if has_exp else None
+    exp_rows_ref = refs.pop(0) if has_exp else None
+    pm_ref = refs.pop(0) if has_mask else None
+    vis_ref = refs.pop(0) if has_vis else None
+    tbl_ref = refs.pop(0) if has_exp else None
+    o_ref = refs.pop(0)
+    cnt_ref = refs.pop(0)
+    block_ref = refs.pop(0) if has_exp else None
+    sems = refs.pop(0) if has_exp else None
+
+    o_ref[...] = jnp.full((1, m), INVALID, jnp.int32)
+    cnt_ref[0] = 0
+
+    def try_pack(cid):
+        """First-occurrence pack: the output tile doubles as the seen-set."""
+        cnt = cnt_ref[0]
+        safe = jnp.clip(cid, 0, n - 1)
+        ok = (cid >= 0) & (cnt < m)
+        if has_mask:
+            ok &= pm_ref[0, safe]
+        if has_vis:
+            ok &= jnp.logical_not(vis_ref[0, safe])
+        if has_exp:  # 'filter' scans a duplicate-free stored row: no dedup
+            ok &= jnp.logical_not(jnp.any(o_ref[0, :] == cid))
+
+        @pl.when(ok)
+        def _():
+            o_ref[0, cnt] = cid
+            cnt_ref[0] = cnt + 1
+
+    # ---- 2-hop row DMAs, depth-2 pipelined (absent rows land row 0 of the
+    # table and are masked off at scan time via exp_rows < 0) ----
+    if has_exp:
+        def start(tt):
+            r = jnp.clip(exp_rows_ref[0, tt], 0, n_l - 1)
+            pltpu.make_async_copy(tbl_ref.at[pl.ds(r, 1)],
+                                  block_ref.at[pl.ds(tt, 1)],
+                                  sems.at[jax.lax.rem(tt, 2)]).start()
+
+        start(0)
+        if t > 1:
+            start(1)
+
+        def dma_body(tt, _):
+            r = jnp.clip(exp_rows_ref[0, tt], 0, n_l - 1)
+            pltpu.make_async_copy(tbl_ref.at[pl.ds(r, 1)],
+                                  block_ref.at[pl.ds(tt, 1)],
+                                  sems.at[jax.lax.rem(tt, 2)]).wait()
+
+            @pl.when(tt + 2 < t)
+            def _():
+                start(tt + 2)
+
+            return 0
+
+        jax.lax.fori_loop(0, t, dma_body, 0)
+
+    # ---- phase 1: head candidates in stored order ----
+    h = head_ref.shape[1]
+
+    def head_body(j, _):
+        try_pack(head_ref[0, j])
+        return 0
+
+    jax.lax.fori_loop(0, h, head_body, 0)
+
+    # ---- phase 2: the 2-hop stream, in the strategy's scan order ----
+    if not has_exp:
+        return
+    if strategy == "compress":
+        # per tail t: the tail id itself, then its row left-to-right
+        total = t * (cap + 1)
+
+        def scan_body(s, _):
+            tt = s // (cap + 1)
+            r = s % (cap + 1)
+            present = exp_rows_ref[0, tt] >= 0
+            hid = block_ref[tt, jnp.clip(r - 1, 0, cap - 1)]
+            cid = jnp.where(r == 0, exp_ids_ref[0, tt],
+                            jnp.where(present, hid, INVALID))
+            try_pack(cid)
+            return 0
+    else:  # two_hop: j-th neighbor of every 1-hop node before the (j+1)-th
+        total = t * cap
+
+        def scan_body(s, _):
+            tt = jax.lax.rem(s, t)
+            j = s // t
+            present = exp_rows_ref[0, tt] >= 0
+            cid = jnp.where(present, block_ref[tt, j], INVALID)
+            try_pack(cid)
+            return 0
+
+    jax.lax.fori_loop(0, total, scan_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strategy", "m", "m_beta", "interpret"))
+def neighbor_expand_pallas(row, nbr_table, pos, pass_mask=None, visited=None,
+                           *, strategy: str, m: int, m_beta: int = 0,
+                           interpret: bool = True):
+    """row (B, cap), nbr_table (n_l, cap), pos (n,) -> (B, m) int32 ids.
+
+    Bit-identical to :func:`repro.kernels.neighbor_expand.ref.
+    neighbor_expand_ref` (enforced by tests/test_neighbor_expand.py).
+    """
+    b, cap = row.shape
+    n = pos.shape[0]
+    if strategy == "filter":
+        head, exp = row, None
+    elif strategy == "compress":
+        head, exp = row[:, :m_beta], row[:, m_beta:]
+    elif strategy == "two_hop":
+        head, exp = row, row
+    else:
+        raise ValueError(strategy)
+    if head.shape[1] == 0:   # zero-width SMEM blocks are illegal; a single
+        head = jnp.full((b, 1), INVALID, jnp.int32)   # -1 never packs
+    has_exp = exp is not None
+    has_mask = pass_mask is not None
+    has_vis = visited is not None
+
+    inputs = [head]
+    in_specs = [pl.BlockSpec((1, head.shape[1]), lambda i: (i, 0),
+                             memory_space=pltpu.SMEM)]
+    t = 1
+    tbl = nbr_table
+    if has_exp:
+        if exp.shape[1] == 0:   # m_beta == cap: dummy -1 tail, never packs
+            exp = jnp.full((b, 1), INVALID, jnp.int32)
+        t = exp.shape[1]
+        exp_rows = jnp.where(exp >= 0, pos[jnp.clip(exp, 0, n - 1)], INVALID)
+        if tbl.shape[0] == 0:   # empty level: every 2-hop row is absent
+            tbl = jnp.full((1, cap), INVALID, jnp.int32)
+        inputs += [exp, exp_rows]
+        in_specs += [
+            pl.BlockSpec((1, t), lambda i: (i, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, t), lambda i: (i, 0), memory_space=pltpu.SMEM),
+        ]
+    if has_mask:
+        inputs.append(pass_mask)
+        in_specs.append(pl.BlockSpec((1, n), lambda i: (i, 0)))
+    if has_vis:
+        inputs.append(visited)
+        in_specs.append(pl.BlockSpec((1, n), lambda i: (i, 0)))
+    scratch = [pltpu.SMEM((1,), jnp.int32)]
+    if has_exp:
+        inputs.append(tbl)
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        scratch += [pltpu.VMEM((t, cap), jnp.int32),
+                    pltpu.SemaphoreType.DMA((2,))]
+
+    kern = functools.partial(
+        _neighbor_expand_kernel, strategy=strategy, m=m, n=n,
+        n_l=tbl.shape[0], cap=cap, t=t, has_mask=has_mask, has_vis=has_vis)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.int32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*inputs)

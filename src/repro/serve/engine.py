@@ -43,6 +43,7 @@ class EngineConfig:
     duplicate_dispatch: bool = False  # straggler mitigation (mirrored shards)
     use_kernel: Optional[bool] = None  # None -> AcornConfig knob
     interpret: Optional[bool] = None
+    expand_kernel: Optional[bool] = None  # None -> AcornConfig knob
     data_parallel: Optional[int] = None  # None -> AcornConfig knob; 0 = all
 
 
@@ -114,6 +115,7 @@ class ServingEngine:
                 ids, d, info = shard.index.search(
                     xq, predicates, k=cfg.k, ef=cfg.ef,
                     use_kernel=cfg.use_kernel, interpret=cfg.interpret,
+                    expand_kernel=cfg.expand_kernel,
                     data_parallel=cfg.data_parallel)
                 result = (ids, d, info)
                 break

@@ -1,0 +1,131 @@
+"""Golden recall@10 regression gate for the search pipeline.
+
+Kernel rewrites of the expansion/merge hot path must not *silently* bend
+recall: every (variant, selectivity) cell of a frozen synthetic workload
+is pinned to the committed table in ``tests/golden/recall_golden.json``
+and asserted to stay within ``±TOL``.  The dataset, graph builds, and
+queries are fully seeded, so on one software stack the numbers are exact;
+the tolerance absorbs cross-version jax numerics drift only.
+
+Regenerate (after an *intentional* behaviour change, never to paper over
+an accidental one):
+
+    PYTHONPATH=src python tests/test_golden_recall.py --regen
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (build_acorn_1, build_acorn_gamma, ground_truth,
+                        hybrid_search, recall_at_k)
+from repro.data import make_lcps_dataset
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "recall_golden.json")
+TOL = 0.02
+
+# frozen workload geometry — changing any of this invalidates the table
+N, D, CARD, SEED = 1500, 16, 8, 0
+B, K, EF, M, M_BETA = 16, 10, 64, 8, 16
+SELECTIVITIES = {"s1.000": 8, "s0.500": 4, "s0.125": 1}  # labels per query
+VARIANTS = ("acorn-gamma", "acorn-1")
+
+
+def _workload():
+    ds = make_lcps_dataset(n=N, d=D, card=CARD, seed=SEED)
+    rng = np.random.default_rng(1)
+    qi = rng.integers(0, N, size=B)
+    xq = jnp.asarray(np.asarray(ds.x)[qi]
+                     + 0.1 * rng.normal(size=(B, D)).astype(np.float32))
+    labels = np.asarray(ds.table.int_cols["label"])
+    masks = {}
+    for name, width in SELECTIVITIES.items():
+        # query q passes labels {q, q+1, ..., q+width-1} mod CARD
+        allow = (np.arange(B)[:, None] + np.arange(width)[None, :]) % CARD
+        masks[name] = jnp.asarray(
+            (labels[None, None, :] == allow[:, :, None]).any(axis=1))
+    return ds, xq, masks
+
+
+def _graph(ds, variant):
+    key = jax.random.PRNGKey(SEED)
+    if variant == "acorn-gamma":
+        return build_acorn_gamma(ds.x, key, M=M, gamma=CARD, m_beta=M_BETA)
+    return build_acorn_1(ds.x, key, M=M)
+
+
+def compute_table():
+    ds, xq, masks = _workload()
+    table = {}
+    for variant in VARIANTS:
+        g = _graph(ds, variant)
+        for sel, mk in masks.items():
+            ids, _, _ = hybrid_search(
+                g, ds.x, xq, mk, k=K, ef=EF, variant=variant, m=M,
+                m_beta=M_BETA,
+                compressed_level0=variant == "acorn-gamma")
+            gt = ground_truth(xq, ds.x, mk, K)
+            table[f"{variant}/{sel}"] = round(float(recall_at_k(ids, gt)), 4)
+    return table
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        f"missing golden table {GOLDEN_PATH}; regenerate with "
+        "PYTHONPATH=src python tests/test_golden_recall.py --regen")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def current():
+    return compute_table()
+
+
+def test_golden_covers_matrix(golden):
+    want = {f"{v}/{s}" for v in VARIANTS for s in SELECTIVITIES}
+    assert set(golden["table"]) == want
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("sel", sorted(SELECTIVITIES))
+def test_recall_within_golden_band(golden, current, variant, sel):
+    cell = f"{variant}/{sel}"
+    got = current[cell]
+    want = golden["table"][cell]
+    assert abs(got - want) <= TOL, (
+        f"recall@{K} drift on {cell}: got {got:.4f}, golden {want:.4f} "
+        f"(tol {TOL}) — a hot-path rewrite bent recall")
+
+
+def test_golden_not_degenerate(golden):
+    """The frozen table itself must describe a working index."""
+    assert all(v > 0.6 for v in golden["table"].values())
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true")
+    args = ap.parse_args()
+    table = compute_table()
+    for k, v in sorted(table.items()):
+        print(f"{k}: {v:.4f}")
+    if args.regen:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        payload = dict(
+            config=dict(n=N, d=D, card=CARD, seed=SEED, b=B, k=K, ef=EF,
+                        M=M, m_beta=M_BETA, tol=TOL,
+                        selectivities=sorted(SELECTIVITIES)),
+            table=table,
+        )
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")

@@ -1,0 +1,231 @@
+"""Property tests for the search-hot-loop primitives the fused
+neighbor-expansion kernel relies on: ``first_m_true``, ``dedup_mask``,
+``filtered_topk.merge`` (``bounded_sorted_merge``), and the
+``neighbor_expand`` reference itself.
+
+Each invariant is a plain ``check_*`` function over concrete inputs.  A
+seeded-random sweep drives every check unconditionally (so the tier-1 run
+exercises the logic even on minimal installs); when hypothesis is
+available the same checks run again under generated inputs, like the
+guarded property tests in test_core_search.py / test_kernels.py.
+
+Invariants:
+  * order preservation — outputs keep input scan order (first_m_true,
+    dedup survivors) or ascending distance order (merge);
+  * idempotence — re-applying an operation to its own output is a no-op;
+  * permutation-of-duplicates invariance — the surviving id *set* of a
+    dedup never depends on how duplicates are arranged;
+  * -1 / +inf padding discipline — padding sits strictly after real
+    entries and never resurrects.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests degrade to skips when hypothesis is absent
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+from repro.core.search import dedup_mask, first_m_true
+from repro.kernels import bounded_sorted_merge, bounded_sorted_merge_ref
+from repro.kernels.neighbor_expand import (neighbor_expand_argsort,
+                                           neighbor_expand_ref)
+
+INVALID = -1
+
+
+# ---------------------------------------------------------------------------
+# check functions (shared by the seeded sweep and the hypothesis wrappers)
+# ---------------------------------------------------------------------------
+
+
+def check_first_m_true(ids, ok, m):
+    ids = np.asarray(ids, np.int32)
+    ok = np.asarray(ok, bool)
+    out = np.asarray(first_m_true(jnp.asarray(ids), jnp.asarray(ok), m))
+    want = [int(v) for v, o in zip(ids, ok) if o][:m]
+    # order preservation + exact packing
+    assert out[:len(want)].tolist() == want
+    # -1 padding discipline: nothing but -1 after the packed prefix
+    assert (out[len(want):] == INVALID).all()
+    # idempotence: re-packing the packed output is a no-op
+    again = np.asarray(first_m_true(jnp.asarray(out),
+                                    jnp.asarray(out >= 0), m))
+    np.testing.assert_array_equal(again, out)
+
+
+def check_dedup_mask(ids):
+    ids = np.asarray(ids, np.int32)
+    mask = np.asarray(dedup_mask(jnp.asarray(ids)))
+    seen = set()
+    for i, v in enumerate(ids.tolist()):
+        want = v >= 0 and v not in seen
+        assert mask[i] == want
+        if v >= 0:
+            seen.add(v)
+    # exactly one survivor per distinct valid id
+    survivors = ids[mask]
+    assert len(set(survivors.tolist())) == len(survivors)
+    assert set(survivors.tolist()) == {v for v in ids.tolist() if v >= 0}
+    # idempotence: the surviving subsequence is already duplicate-free, so
+    # deduping it keeps everything valid
+    sub = np.asarray(dedup_mask(jnp.asarray(survivors)))
+    assert sub.all() or len(survivors) == 0
+
+
+def check_dedup_permutation_invariance(ids, perm_seed):
+    """The surviving id SET never depends on duplicate arrangement."""
+    ids = np.asarray(ids, np.int32)
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(len(ids))
+    a = np.asarray(dedup_mask(jnp.asarray(ids)))
+    b = np.asarray(dedup_mask(jnp.asarray(ids[perm])))
+    assert set(ids[a].tolist()) == set(ids[perm][b].tolist())
+    assert a.sum() == b.sum()
+
+
+def check_bounded_sorted_merge(beam, cand, payload_seed=0):
+    """Merge == stable-argsort oracle; sortedness; payload transport."""
+    beam = np.sort(np.asarray(beam, np.float32))[None, :]
+    cand = np.asarray(cand, np.float32)[None, :]
+    rng = np.random.default_rng(payload_seed)
+    bp = (rng.integers(0, 999, size=beam.shape).astype(np.int32),)
+    cp = (rng.integers(0, 999, size=cand.shape).astype(np.int32),)
+    got_d, (got_p,) = bounded_sorted_merge(
+        jnp.asarray(beam), jnp.asarray(cand),
+        (jnp.asarray(bp[0]),), (jnp.asarray(cp[0]),))
+    want_d, (want_p,) = bounded_sorted_merge_ref(
+        jnp.asarray(beam), jnp.asarray(cand),
+        (jnp.asarray(bp[0]),), (jnp.asarray(cp[0]),))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    d = np.asarray(got_d)[0]
+    assert (np.diff(d[np.isfinite(d)]) >= 0).all()
+    # idempotence: merging an all-inf candidate set is a no-op
+    inf_c = np.full_like(cand, np.inf)
+    d2, (p2,) = bounded_sorted_merge(got_d, jnp.asarray(inf_c),
+                                     (got_p,), (jnp.asarray(cp[0]),))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(got_d))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(got_p))
+
+
+def check_neighbor_expand_ref_vs_argsort(seed, strategy, m, m_beta):
+    """The sort-free fusion reference == legacy argsort formulation."""
+    rng = np.random.default_rng(seed)
+    n, n_l, cap, b = 80, 60, 6, 3
+    pos = np.full(n, -1, np.int32)
+    members = rng.choice(n, size=n_l, replace=False)
+    pos[members] = np.arange(n_l)
+    tbl = rng.choice(members, size=(n_l, cap)).astype(np.int32)
+    tbl[rng.random((n_l, cap)) < 0.3] = -1
+    row = rng.choice(members, size=(b, cap)).astype(np.int32)
+    row[rng.random((b, cap)) < 0.3] = -1
+    pm = jnp.asarray(rng.random((b, n)) < 0.5)
+    vis = jnp.asarray(rng.random((b, n)) < 0.2)
+    kw = dict(strategy=strategy, m=m, m_beta=m_beta)
+    a = neighbor_expand_argsort(jnp.asarray(row), jnp.asarray(tbl),
+                                jnp.asarray(pos), pm, vis, **kw)
+    r = neighbor_expand_ref(jnp.asarray(row), jnp.asarray(tbl),
+                            jnp.asarray(pos), pm, vis, **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+# ---------------------------------------------------------------------------
+# seeded sweeps — always run, hypothesis or not
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_first_m_true_sweep(seed):
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(1, 40))
+    ids = rng.integers(-1, 20, size=c)
+    ok = rng.random(c) < 0.6
+    check_first_m_true(ids, ok, int(rng.integers(1, 12)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dedup_mask_sweep(seed):
+    rng = np.random.default_rng(100 + seed)
+    ids = rng.integers(-1, 8, size=int(rng.integers(1, 40)))
+    check_dedup_mask(ids)
+    check_dedup_permutation_invariance(ids, perm_seed=seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_bounded_sorted_merge_sweep(seed):
+    rng = np.random.default_rng(200 + seed)
+    l, c = int(rng.integers(2, 24)), int(rng.integers(1, 16))
+    beam = rng.normal(size=l)
+    beam[rng.random(l) < 0.3] = np.inf
+    cand = rng.normal(size=c)
+    cand[rng.random(c) < 0.3] = np.inf
+    # force exact ties across beam and candidates
+    if l > 2 and c > 1:
+        cand[0] = np.sort(beam)[1]
+    check_bounded_sorted_merge(beam, cand, payload_seed=seed)
+
+
+@pytest.mark.parametrize("strategy,m_beta", [("filter", 0), ("compress", 0),
+                                             ("compress", 3),
+                                             ("compress", 6),
+                                             ("two_hop", 0)])
+@pytest.mark.parametrize("seed", range(3))
+def test_neighbor_expand_ref_sweep(strategy, m_beta, seed):
+    check_neighbor_expand_ref_vs_argsort(300 + seed, strategy, m=5,
+                                         m_beta=m_beta)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis wrappers — generated inputs over the same checks
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(ids=st.lists(st.integers(-1, 25), min_size=1, max_size=50),
+           p=st.floats(0.0, 1.0), m=st.integers(1, 16), seed=st.integers(0, 9))
+    def test_first_m_true_property(ids, p, m, seed):
+        rng = np.random.default_rng(seed)
+        check_first_m_true(np.asarray(ids), rng.random(len(ids)) < p, m)
+
+    @settings(max_examples=40, deadline=None)
+    @given(ids=st.lists(st.integers(-1, 10), min_size=1, max_size=50),
+           seed=st.integers(0, 9))
+    def test_dedup_mask_property(ids, seed):
+        check_dedup_mask(np.asarray(ids))
+        check_dedup_permutation_invariance(np.asarray(ids), perm_seed=seed)
+
+    @settings(max_examples=30, deadline=None)
+    @given(beam=st.lists(st.floats(-10, 10) | st.just(float("inf")),
+                         min_size=2, max_size=24),
+           cand=st.lists(st.floats(-10, 10) | st.just(float("inf")),
+                         min_size=1, max_size=16),
+           seed=st.integers(0, 9))
+    def test_bounded_sorted_merge_property(beam, cand, seed):
+        check_bounded_sorted_merge(np.asarray(beam), np.asarray(cand),
+                                   payload_seed=seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           strategy=st.sampled_from(["filter", "compress", "two_hop"]),
+           m=st.integers(1, 10), m_beta=st.integers(0, 6))
+    def test_neighbor_expand_ref_property(seed, strategy, m, m_beta):
+        check_neighbor_expand_ref_vs_argsort(seed, strategy, m, m_beta)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_first_m_true_property():
+        pytest.importorskip("hypothesis")
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_dedup_mask_property():
+        pytest.importorskip("hypothesis")
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_bounded_sorted_merge_property():
+        pytest.importorskip("hypothesis")
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_neighbor_expand_ref_property():
+        pytest.importorskip("hypothesis")
