@@ -26,6 +26,7 @@ MODULES = [
     ("fig13_graph_quality", "Fig 13: predicate-subgraph quality"),
     ("bench_batched_search", "Batched search: jit buckets x kernel QPS"),
     ("bench_sharded_search", "Sharded search: device-count x batch QPS"),
+    ("bench_corpus_sharded", "Corpus-sharded SPMD: mesh-shape x batch QPS"),
     ("bench_neighbor_expand", "Neighbor expansion: strategy x cap x impl"),
 ]
 

@@ -162,6 +162,7 @@ def search_batch(
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
     cache: Optional[VariantCache] = None,
     data_parallel: Optional[int] = 1,
+    corpus_parallel: Optional[int] = 1,
 ) -> Tuple[Array, Array, SearchStats]:
     """Ragged-batch hybrid search through jit buckets.
 
@@ -182,10 +183,23 @@ def search_batch(
     Pallas kernel (``None`` follows ``use_kernel``); the resolved value is
     part of the compiled-variant cache key, like ``use_kernel``.
 
+    ``corpus_parallel`` is the corpus-mesh axis size and is recorded in
+    the variant-cache key, but must resolve to 1 here (``None``/``0``
+    mean 1): this entry point searches ONE corpus shard — a built graph
+    cannot be row-sharded post hoc, so multi-shard SPMD dispatch runs
+    per-shard graphs through ``repro.distributed.corpus_parallel.
+    corpus_search_batch`` (whose cache keys carry the real mesh shape).
+
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     cache = _DEFAULT_CACHE if cache is None else cache
     expand_kernel = use_kernel if expand_kernel is None else expand_kernel
+    if corpus_parallel not in (None, 0, 1):
+        raise ValueError(
+            f"corpus_parallel={corpus_parallel}: search_batch searches a "
+            "single corpus shard; use repro.distributed.corpus_parallel."
+            "corpus_search_batch (via ServingEngine) for a sharded corpus")
+    cp = 1
     if pass_masks is None:
         # documented unfiltered fallback: without a predicate mask the
         # filter/compress/two_hop strategies are undefined (they index the
@@ -216,7 +230,7 @@ def search_batch(
                 msk = pad_rows(msk, bucket - take)
         key = (bucket, k, ef, variant, m, m_beta, metric, compressed_level0,
                max_expansions, use_kernel, interpret, expand_kernel,
-               msk is not None, dp)
+               msk is not None, cp, dp)
         fn = cache.get(key, lambda: _build_variant(
             cache, key, statics, has_mask=msk is not None, data_parallel=dp))
         ids, d, stats = fn(graph, x, q, msk)

@@ -45,6 +45,12 @@ class AcornConfig:
     # query-data-parallel devices for the graph route: 1 = single device,
     # None/0 = all local devices, N = min(N, local device count)
     data_parallel: Optional[int] = 1
+    # corpus-mesh axis size for corpus-sharded serving
+    # (repro.distributed.corpus_parallel via ServingEngine): None/0 = auto
+    # (one device per corpus shard when the host has them); an explicit
+    # value must equal the engine's shard count. A single HybridIndex is
+    # always one corpus shard — its own searches run with the knob at 1.
+    corpus_parallel: Optional[int] = None
 
     @property
     def s_min(self) -> float:
@@ -95,6 +101,34 @@ class HybridIndex:
         return self.index_bytes + self.x.size * self.x.dtype.itemsize
 
     # ------------------------------------------------------------------
+    def prefilter(self, xq: Array, masks: Array, k: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact pre-filtered brute force through the jit buckets.
+
+        The §5.2 low-selectivity route, shared by :meth:`search` and the
+        serving engine's corpus-sharded SPMD path (which threads these
+        exact results into its kernel as per-(shard, query) overrides).
+        Returns numpy (B, k) ids / dists; ids are local row indices.
+        """
+        cfg = self.config
+        b = xq.shape[0]
+        out_ids = np.full((b, k), INVALID, np.int32)
+        out_d = np.full((b, k), np.inf, np.float32)
+        xq, masks = jnp.asarray(xq), jnp.asarray(masks)
+        start = 0
+        for take, bucket in plan_chunks(b, cfg.buckets):
+            sl = slice(start, start + take)
+            q, msk = xq[sl], masks[sl]
+            if take < bucket:
+                q = pad_rows(q, bucket - take)
+                msk = pad_rows(msk, bucket - take)
+            ids, d = prefilter_search(q, self.x, msk, k, metric=cfg.metric)
+            out_ids[sl] = np.asarray(ids)[:take]
+            out_d[sl] = np.asarray(d)[:take]
+            start += take
+        return out_ids, out_d
+
+    # ------------------------------------------------------------------
     def search(
         self,
         xq: Array,
@@ -106,6 +140,7 @@ class HybridIndex:
         interpret: Optional[bool] = None,
         expand_kernel: Optional[bool] = None,
         data_parallel: Optional[int] = None,
+        corpus_parallel: Optional[int] = None,
     ) -> Tuple[Array, Array, dict]:
         """Batched hybrid search with per-query cost-based routing.
 
@@ -117,7 +152,12 @@ class HybridIndex:
         override the config knobs per call (``None`` defers to the config;
         a config ``expand_kernel`` of ``None`` in turn follows
         ``use_kernel``; pass ``data_parallel=0`` to request all local
-        devices explicitly).
+        devices explicitly).  ``corpus_parallel`` is recorded in the
+        compiled-variant cache keys but must resolve to 1 here: one
+        HybridIndex is one corpus shard — multi-shard SPMD dispatch lives
+        in ``repro.distributed.corpus_parallel`` / ``ServingEngine``
+        (``None`` means 1; the AcornConfig knob is engine-level and is
+        deliberately NOT consulted).
 
         Returns (ids (B,k), dists (B,k), info) where info records the route
         taken per query and search stats.
@@ -147,20 +187,9 @@ class HybridIndex:
         pre_idx = np.nonzero(use_pre)[0]
         gr_idx = np.nonzero(~use_pre)[0]
         if len(pre_idx):
-            xq_pre, masks_pre = xq[pre_idx], masks[pre_idx]
-            start = 0
-            for take, bucket in plan_chunks(len(pre_idx), cfg.buckets):
-                sl = slice(start, start + take)
-                q, msk = xq_pre[sl], masks_pre[sl]
-                if take < bucket:
-                    q = pad_rows(q, bucket - take)
-                    msk = pad_rows(msk, bucket - take)
-                ids, d = prefilter_search(q, self.x, msk, k,
-                                          metric=cfg.metric)
-                dst = pre_idx[sl]
-                out_ids[dst] = np.asarray(ids)[:take]
-                out_d[dst] = np.asarray(d)[:take]
-                start += take
+            ids_p, d_p = self.prefilter(xq[pre_idx], masks[pre_idx], k)
+            out_ids[pre_idx] = ids_p
+            out_d[pre_idx] = d_p
             dist_comps[pre_idx] = np.asarray(masks[pre_idx].sum(axis=1))
         if len(gr_idx):
             variant = cfg.variant
@@ -172,7 +201,8 @@ class HybridIndex:
                 max_expansions=cfg.max_expansions, use_kernel=use_kernel,
                 interpret=interpret, expand_kernel=expand_kernel,
                 buckets=cfg.buckets, cache=self.cache,
-                data_parallel=data_parallel)
+                data_parallel=data_parallel,
+                corpus_parallel=corpus_parallel)
             out_ids[gr_idx] = np.asarray(ids)
             out_d[gr_idx] = np.asarray(d)
             dist_comps[gr_idx] = np.asarray(stats.dist_comps)

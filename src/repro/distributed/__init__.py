@@ -1,10 +1,17 @@
-"""Distributed execution: sharding rules, collectives, query parallelism."""
+"""Distributed execution: sharding rules, collectives, query parallelism,
+corpus-sharded SPMD serving."""
 from repro.core.batched import mesh_buckets
 
+from .collectives import gathered_topk_merge, merge_topk, sharded_topk
+from .corpus_parallel import (ShardedCorpus, corpus_mesh, corpus_search_batch,
+                              corpus_search_fn, resolve_corpus_mesh_shape,
+                              shard_slice, stack_corpus)
 from .query_parallel import (data_mesh, local_device_count,
                              resolve_data_parallel, sharded_search_fn)
 
 __all__ = [
-    "data_mesh", "local_device_count", "mesh_buckets",
-    "resolve_data_parallel", "sharded_search_fn",
+    "ShardedCorpus", "corpus_mesh", "corpus_search_batch", "corpus_search_fn",
+    "data_mesh", "gathered_topk_merge", "local_device_count", "merge_topk",
+    "mesh_buckets", "resolve_corpus_mesh_shape", "resolve_data_parallel",
+    "shard_slice", "sharded_search_fn", "sharded_topk", "stack_corpus",
 ]

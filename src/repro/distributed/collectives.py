@@ -19,30 +19,88 @@ Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
-# sharded top-k (ACORN serving: corpus sharded on 'model')
+# deterministic cross-shard top-k merge (ACORN serving: corpus sharded)
 # ---------------------------------------------------------------------------
 
 
+def merge_topk(ids, d, k: int):
+    """Deterministic cross-shard top-k merge over concatenated candidates.
+
+    ids (B, C) int32 global ids (-1 = invalid), d (B, C) distances (invalid
+    candidates carry ``inf``).  Each row is ordered by the stable
+    lexicographic (distance, global id) key, so the merge is invariant to
+    shard arrival/iteration order and equal-distance ties always resolve
+    the same way (smallest global id first).  Exact duplicate candidates —
+    the same (id, distance) pair contributed twice, e.g. by a
+    duplicate-dispatch mirror of a shard — are collapsed to one entry, so
+    mirrored dispatch never crowds real neighbors out of the top k.
+    Non-finite distances come back as id ``-1`` / ``inf``.
+    """
+    order = jnp.lexsort((ids, d), axis=1)
+    s_ids = jnp.take_along_axis(ids, order, axis=1)
+    s_d = jnp.take_along_axis(d, order, axis=1)
+    # exact (id, distance) duplicates are adjacent after the lexsort; keep
+    # the first of each run (invalid entries are already id -1 / inf)
+    dup = jnp.zeros_like(s_ids, bool).at[:, 1:].set(
+        (s_ids[:, 1:] == s_ids[:, :-1]) & (s_d[:, 1:] == s_d[:, :-1])
+        & (s_ids[:, 1:] >= 0))
+    s_d = jnp.where(dup, jnp.inf, s_d)
+    # survivors are already (distance, id)-sorted; a stable sort floats the
+    # invalidated duplicates past the real candidates without reordering
+    order2 = jnp.argsort(s_d, axis=1, stable=True)[:, :k]
+    out_d = jnp.take_along_axis(s_d, order2, axis=1)
+    out_ids = jnp.where(jnp.isfinite(out_d),
+                        jnp.take_along_axis(s_ids, order2, axis=1), -1)
+    return out_ids, out_d
+
+
+def gathered_topk_merge(ids, d, k: int, axis: str):
+    """Global top-k merge along mesh ``axis`` from inside a shard_map body.
+
+    Each shard contributes its local top candidates ids/d (B_local, k');
+    an all-gather along ``axis`` (k' entries per shard — tiny) feeds the
+    deterministic :func:`merge_topk`, so every shard computes the identical
+    merged (B_local, k) result (replicated along ``axis``).  This is the
+    native-collective replacement for the serving engine's host-side
+    ``jnp.concatenate`` + merge loop.
+    """
+    i_all = jax.lax.all_gather(ids, axis, axis=1, tiled=True)  # (B, P*k')
+    d_all = jax.lax.all_gather(d, axis, axis=1, tiled=True)
+    return merge_topk(i_all, d_all, k)
+
+
 def sharded_topk(mesh: Mesh, dp, tp: str = "model"):
-    """Returns f(scores_local (B_local, N_local), base (int)) -> (ids, scores)
+    """Returns f(scores_local (B_local, N_local), ids_local) -> (ids, scores)
     global top-k merge along the tp axis: local top-k, all-gather (k per
-    shard — tiny), local reduce."""
+    shard — tiny), deterministic local reduce via :func:`merge_topk`
+    (score-descending, ties broken by smallest id).
+
+    The merged result is replicated along ``tp``, but the out_specs emit
+    it under an explicit leading ``tp`` dim (sliced off outside) instead
+    of leaving the axis unmentioned: with the replication check off,
+    GSPMD's assembly of an unmentioned output axis is unspecified and can
+    compile to a cross-replica sum (see corpus_parallel.corpus_search_fn).
+    """
 
     def make(k: int):
         def local(scores, ids):
             s, pos = jax.lax.top_k(scores, k)
             i = jnp.take_along_axis(ids, pos, axis=1)
-            # gather the k candidates from every tp shard
-            s_all = jax.lax.all_gather(s, tp, axis=1, tiled=True)  # (B, P*k)
-            i_all = jax.lax.all_gather(i, tp, axis=1, tiled=True)
-            s2, pos2 = jax.lax.top_k(s_all, k)
-            return jnp.take_along_axis(i_all, pos2, axis=1), s2
+            # scores maximize; merge_topk minimizes distances — negate
+            mi, md = gathered_topk_merge(i, -s, k, tp)
+            return mi[None], -md[None]
 
-        return shard_map(
+        f = shard_map(
             local, mesh=mesh,
             in_specs=(P(dp, tp), P(dp, tp)),
-            out_specs=(P(dp, None), P(dp, None)), check_vma=False,
+            out_specs=(P(tp, dp, None), P(tp, dp, None)), check_vma=False,
         )
+
+        def apply(scores, ids):
+            mi, ms = f(scores, ids)
+            return mi[0], ms[0]
+
+        return apply
 
     return make
 

@@ -31,3 +31,18 @@ def make_host_mesh(model_axis: int = 1):
 def dp_axes(mesh) -> tuple:
     """The batch-parallel axes of a mesh (('pod',)? + ('data',))."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_corpus_serving_mesh(data: int, corpus: int):
+    """2-D ``(data, corpus)`` mesh for corpus-sharded hybrid-search serving.
+
+    Queries shard along ``data``; corpus shards (vectors + per-shard ACORN
+    graphs + pass-masks) along ``corpus`` — one shard per corpus device.
+    Delegates to the cached constructor in
+    ``repro.distributed.corpus_parallel`` so launch scripts and the serving
+    engine share mesh identity (jit cache hits).  On a real pod slice the
+    same topology applies with ``data * corpus`` = slice size; scaling the
+    corpus is a mesh-shape change, not an engine rewrite.
+    """
+    from repro.distributed.corpus_parallel import corpus_mesh
+    return corpus_mesh(data, corpus)

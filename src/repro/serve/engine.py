@@ -7,12 +7,30 @@ Operational wrapper around HybridIndex for production serving:
     (``repro.core.batched.search_batch`` via ``HybridIndex.search``), so a
     ragged request stream runs against a handful of compiled shapes and the
     engine never re-traces per request shape;
-  * query data parallelism — ``EngineConfig.data_parallel`` shards each
-    batch's queries across local devices inside every index shard
+  * corpus sharding, two execution paths —
+
+      - **SPMD (default when the mesh fits):** the per-shard indexes are
+        stacked into a :class:`repro.distributed.corpus_parallel.ShardedCorpus`
+        and every batch runs as ONE program on a 2-D ``(data, corpus)``
+        mesh: corpus arrays split one shard per corpus device, queries
+        split along ``data``, per-shard search + local→global id offset +
+        all-gather (distance, global-id) lexsort merge all inside the
+        kernel (``repro.distributed.collectives.gathered_topk_merge``);
+      - **host loop (:meth:`search_batch_host`):** the original Python
+        walk over shards with a host-side merge — retained as the parity
+        oracle for the SPMD path and as the automatic fallback when the
+        host has fewer devices than corpus shards.
+
+    Both paths are bit-identical (gated in tests/test_corpus_parallel.py);
+  * query data parallelism — ``EngineConfig.data_parallel`` sizes the
+    ``data`` mesh axis of the SPMD path, or shards each host-loop batch's
+    queries across local devices inside every index shard
     (``repro.distributed.query_parallel``; ``None`` defers to the
     AcornConfig knob);
   * per-query cost-based routing (ACORN graph vs pre-filter, §5.2) — done
-    inside HybridIndex; the engine exposes route statistics;
+    inside HybridIndex on the host path; the SPMD path computes the same
+    per-(shard, query) decisions host-side and threads them into the
+    kernel as a route mask + exact pre-filter overrides;
   * straggler mitigation — in the multi-host layout each corpus shard is a
     stateless replica of an on-disk artifact; the engine simulates duplicate
     dispatch: every shard query optionally runs on a mirror, the merge takes
@@ -25,13 +43,18 @@ Operational wrapper around HybridIndex for production serving:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AcornConfig, HybridIndex, Predicate
-from repro.core.predicates import AttributeTable
+from repro.core import AcornConfig, HybridIndex, Predicate, VariantCache
+from repro.core.predicates import AttributeTable, evaluate_batch
+from repro.distributed.collectives import merge_topk  # noqa: F401  (re-export)
+from repro.distributed.corpus_parallel import (ShardedCorpus,
+                                               corpus_search_batch,
+                                               resolve_corpus_mesh_shape,
+                                               stack_corpus)
 
 
 @dataclasses.dataclass
@@ -45,6 +68,11 @@ class EngineConfig:
     interpret: Optional[bool] = None
     expand_kernel: Optional[bool] = None  # None -> AcornConfig knob
     data_parallel: Optional[int] = None  # None -> AcornConfig knob; 0 = all
+    # corpus-mesh axis size for the SPMD path. None -> AcornConfig knob;
+    # None/0 there = auto (n_shards when the host has the devices). An
+    # explicit value must equal n_shards (one shard per corpus device).
+    corpus_parallel: Optional[int] = None
+    host_fallback: bool = False  # force the host-loop oracle path
 
 
 @dataclasses.dataclass
@@ -54,26 +82,10 @@ class _Shard:
     healthy: bool = True
 
 
-def merge_topk(ids, d, k: int):
-    """Deterministic cross-shard top-k merge.
-
-    Sorts each row of the concatenated per-shard candidates by
-    (distance, global id): the stable lexicographic order makes the merge
-    independent of shard arrival/iteration order, so equal-distance results
-    from different shards (and duplicate-dispatch mirrors) always resolve
-    the same way.  Invalid candidates carry ``inf`` distance and sort last;
-    they come back as id ``-1``.
-    """
-    order = jnp.lexsort((ids, d), axis=1)[:, :k]
-    out_d = jnp.take_along_axis(d, order, axis=1)
-    out_ids = jnp.where(jnp.isfinite(out_d),
-                        jnp.take_along_axis(ids, order, axis=1), -1)
-    return out_ids, out_d
-
-
 class ServingEngine:
     """Shards a corpus row-wise, builds one ACORN index per shard, serves
-    batched hybrid queries with global top-k merge."""
+    batched hybrid queries with global top-k merge — SPMD on a
+    ``(data, corpus)`` mesh when it fits, host loop otherwise."""
 
     def __init__(self, x, table: AttributeTable, acorn: AcornConfig,
                  cfg: EngineConfig, seed: int = 0):
@@ -94,10 +106,121 @@ class ServingEngine:
                                         "prefilter_routed": 0,
                                         "graph_routed": 0,
                                         "duplicated_dispatches": 0}
+        # SPMD state: stacked corpus (rebuilt lazily after rebuild_shard)
+        # and the compiled-variant cache for the mesh kernels
+        self._corpus: Optional[ShardedCorpus] = None
+        self.spmd_cache = VariantCache()
+
+    # ------------------------------------------------------------------
+    # SPMD geometry + knob resolution
+    # ------------------------------------------------------------------
+    def spmd_mesh_shape(self) -> Optional[Tuple[int, int]]:
+        """The ``(data, corpus)`` mesh the SPMD path would run on, or
+        ``None`` when this engine serves through the host loop."""
+        if self.cfg.host_fallback:
+            return None
+        cp = self.cfg.corpus_parallel
+        if cp is None:
+            cp = self.acorn.corpus_parallel
+        dp = self.cfg.data_parallel
+        if dp is None:
+            dp = self.acorn.data_parallel
+        return resolve_corpus_mesh_shape(self.cfg.n_shards,
+                                         data_parallel=dp,
+                                         corpus_parallel=cp)
+
+    def _resolved_kernel_knobs(self) -> Tuple[bool, bool, bool]:
+        a, c = self.acorn, self.cfg
+        use_kernel = a.use_kernel if c.use_kernel is None else c.use_kernel
+        interpret = a.interpret if c.interpret is None else c.interpret
+        expand = a.expand_kernel if c.expand_kernel is None else c.expand_kernel
+        return use_kernel, interpret, use_kernel if expand is None else expand
+
+    def _stacked_corpus(self) -> ShardedCorpus:
+        if self._corpus is None:
+            self._corpus = stack_corpus(
+                [s.index.graph for s in self.shards],
+                [s.index.x for s in self.shards],
+                [s.base for s in self.shards])
+        return self._corpus
 
     # ------------------------------------------------------------------
     def search_batch(self, xq, predicates: Sequence[Predicate]):
-        """One batched step across all shards + merge."""
+        """One batched step across all shards + merge (SPMD when the mesh
+        fits, host loop otherwise — bit-identical either way)."""
+        shape = self.spmd_mesh_shape()
+        if shape is None:
+            return self.search_batch_host(xq, predicates)
+        return self._search_batch_spmd(xq, predicates, *shape)
+
+    # ------------------------------------------------------------------
+    def _search_batch_spmd(self, xq, predicates: Sequence[Predicate],
+                           dp: int, cp: int):
+        """The mesh-native path: routing/fault state is computed host-side
+        and threaded into one SPMD kernel per jit bucket."""
+        cfg, acorn = self.cfg, self.acorn
+        b, k = xq.shape[0], cfg.k
+        n_shards = cfg.n_shards
+        corpus = self._stacked_corpus()
+        n_max = corpus.x.shape[1]
+
+        masks = np.zeros((n_shards, b, n_max), bool)
+        use_pre = np.zeros((n_shards, b), bool)
+        pre_ids = np.full((n_shards, b, k), -1, np.int32)
+        pre_d = np.full((n_shards, b, k), np.inf, np.float32)
+        alive = np.zeros((n_shards,), bool)
+        mirrors = 2 if (cfg.duplicate_dispatch and n_shards > 1) else 1
+        for s, shard in enumerate(self.shards):
+            if not shard.healthy:
+                if mirrors > 1:
+                    # the mirror replica answers for the failed primary —
+                    # identical result, one duplicated dispatch on the wire
+                    self.stats["duplicated_dispatches"] += 1
+                else:
+                    continue  # shard contributes nothing this batch
+            alive[s] = True
+            m_s = np.asarray(evaluate_batch(predicates, shard.index.table))
+            masks[s, :, : m_s.shape[1]] = m_s
+            # §5.2 cost-based routing, per (shard, query): each shard's own
+            # selectivity sketch decides, exactly like HybridIndex.search
+            s_est = np.array([shard.index.sketch.estimate(p)
+                              for p in predicates])
+            pre = s_est < acorn.s_min
+            use_pre[s] = pre
+            if pre.any():
+                qidx = np.nonzero(pre)[0]
+                ids_p, d_p = shard.index.prefilter(
+                    xq[qidx], jnp.asarray(m_s[qidx]), k)
+                pre_ids[s, qidx] = ids_p
+                pre_d[s, qidx] = d_p
+            self.stats["prefilter_routed"] += int(pre.sum())
+            self.stats["graph_routed"] += int(b - pre.sum())
+
+        self.stats["queries"] += b
+        self.stats["batches"] += 1
+        if not alive.any():
+            # every shard (and mirror) down: degrade to an empty result set
+            return (jnp.full((b, k), -1, jnp.int32),
+                    jnp.full((b, k), jnp.inf, jnp.float32))
+
+        use_kernel, interpret, expand_kernel = self._resolved_kernel_knobs()
+        variant = acorn.variant
+        ids, d, _, _ = corpus_search_batch(
+            corpus, xq, jnp.asarray(masks), jnp.asarray(pre_ids),
+            jnp.asarray(pre_d), jnp.asarray(use_pre), jnp.asarray(alive),
+            k=k, ef=cfg.ef or acorn.ef_search, variant=variant, m=acorn.M,
+            m_beta=acorn.resolved_m_beta(), metric=acorn.metric,
+            compressed_level0=acorn.compress and variant == "acorn-gamma",
+            max_expansions=acorn.max_expansions, use_kernel=use_kernel,
+            interpret=interpret, expand_kernel=expand_kernel,
+            buckets=acorn.buckets, cache=self.spmd_cache,
+            data_parallel=dp, corpus_parallel=cp)
+        return ids, d
+
+    # ------------------------------------------------------------------
+    def search_batch_host(self, xq, predicates: Sequence[Predicate]):
+        """The host-side shard walk + merge — the parity oracle for the
+        SPMD path and the fallback when the mesh doesn't fit."""
         cfg = self.cfg
         b = xq.shape[0]
         all_ids, all_d = [], []
@@ -144,9 +267,10 @@ class ServingEngine:
     def serve(self, xq, predicates: Sequence[Predicate]):
         """Batch an arbitrary request stream into cfg.batch_size chunks.
 
-        Chunks are NOT padded here: each shard's ``HybridIndex.search`` pads
-        to its jit buckets, so ragged tails reuse the per-bucket compiled
-        variants instead of minting a new shape."""
+        Chunks are NOT padded here: each path pads to its jit buckets
+        (``HybridIndex.search`` per shard on the host loop,
+        ``corpus_search_batch`` on the mesh), so ragged tails reuse the
+        per-bucket compiled variants instead of minting a new shape."""
         b = self.cfg.batch_size
         outs_i, outs_d = [], []
         n = xq.shape[0]
@@ -165,6 +289,11 @@ class ServingEngine:
         return {s: shard.index.cache.bucket_traces()
                 for s, shard in enumerate(self.shards)}
 
+    def spmd_traces(self) -> Dict[int, int]:
+        """SPMD-kernel traces by jit bucket (same steady-state guard for
+        the mesh path)."""
+        return self.spmd_cache.bucket_traces()
+
     # ------------------------------------------------------------------
     # fault tolerance
     # ------------------------------------------------------------------
@@ -182,3 +311,4 @@ class ServingEngine:
                                         self._table.take(idx), self.acorn,
                                         seed=seed + s)
         shard.healthy = True
+        self._corpus = None  # restack the SPMD corpus on next dispatch

@@ -7,6 +7,14 @@ and asserted to stay within ``±TOL``.  The dataset, graph builds, and
 queries are fully seeded, so on one software stack the numbers are exact;
 the tolerance absorbs cross-version jax numerics drift only.
 
+Besides the raw ``hybrid_search`` variants the table pins the
+corpus-sharded serving engine (``engine-s{1,2,4}`` cells): per-shard
+index builds + the cross-shard (distance, global-id) merge + §5.2 routing
+must hold recall at every shard count.  The engine dispatches SPMD on a
+``(data, corpus)`` mesh when the host has the devices and through the
+host loop otherwise — the two are bit-identical (test_corpus_parallel.py),
+so the golden numbers are device-count independent.
+
 Regenerate (after an *intentional* behaviour change, never to paper over
 an accidental one):
 
@@ -20,8 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (build_acorn_1, build_acorn_gamma, ground_truth,
-                        hybrid_search, recall_at_k)
+from repro.core import (OneOf, build_acorn_1, build_acorn_gamma,
+                        ground_truth, hybrid_search, recall_at_k)
 from repro.data import make_lcps_dataset
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
@@ -33,6 +41,7 @@ N, D, CARD, SEED = 1500, 16, 8, 0
 B, K, EF, M, M_BETA = 16, 10, 64, 8, 16
 SELECTIVITIES = {"s1.000": 8, "s0.500": 4, "s0.125": 1}  # labels per query
 VARIANTS = ("acorn-gamma", "acorn-1")
+ENGINE_SHARDS = (1, 2, 4)  # corpus-sharded serving variants
 
 
 def _workload():
@@ -51,6 +60,17 @@ def _workload():
     return ds, xq, masks
 
 
+def _predicates():
+    """Predicate objects reproducing the _workload masks exactly: query q
+    passes labels {q, q+1, ..., q+width-1} mod CARD."""
+    preds = {}
+    for name, width in SELECTIVITIES.items():
+        allow = (np.arange(B)[:, None] + np.arange(width)[None, :]) % CARD
+        preds[name] = [OneOf("label", tuple(int(v) for v in row))
+                       for row in allow]
+    return preds
+
+
 def _graph(ds, variant):
     key = jax.random.PRNGKey(SEED)
     if variant == "acorn-gamma":
@@ -59,7 +79,11 @@ def _graph(ds, variant):
 
 
 def compute_table():
+    from repro.core import AcornConfig
+    from repro.serve import EngineConfig, ServingEngine
+
     ds, xq, masks = _workload()
+    preds = _predicates()
     table = {}
     for variant in VARIANTS:
         g = _graph(ds, variant)
@@ -70,6 +94,16 @@ def compute_table():
                 compressed_level0=variant == "acorn-gamma")
             gt = ground_truth(xq, ds.x, mk, K)
             table[f"{variant}/{sel}"] = round(float(recall_at_k(ids, gt)), 4)
+    for n_shards in ENGINE_SHARDS:
+        acorn = AcornConfig(M=M, gamma=CARD, m_beta=M_BETA, ef_search=EF)
+        eng = ServingEngine(ds.x, ds.table, acorn,
+                            EngineConfig(batch_size=B, k=K, ef=EF,
+                                         n_shards=n_shards), seed=SEED)
+        for sel, mk in masks.items():
+            ids, _ = eng.serve(xq, preds[sel])
+            gt = ground_truth(xq, ds.x, mk, K)
+            table[f"engine-s{n_shards}/{sel}"] = round(
+                float(recall_at_k(ids, gt)), 4)
     return table
 
 
@@ -89,10 +123,14 @@ def current():
 
 def test_golden_covers_matrix(golden):
     want = {f"{v}/{s}" for v in VARIANTS for s in SELECTIVITIES}
+    want |= {f"engine-s{n}/{s}" for n in ENGINE_SHARDS
+             for s in SELECTIVITIES}
     assert set(golden["table"]) == want
 
 
-@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("variant",
+                         VARIANTS + tuple(f"engine-s{n}"
+                                          for n in ENGINE_SHARDS))
 @pytest.mark.parametrize("sel", sorted(SELECTIVITIES))
 def test_recall_within_golden_band(golden, current, variant, sel):
     cell = f"{variant}/{sel}"
@@ -122,7 +160,8 @@ if __name__ == "__main__":
         payload = dict(
             config=dict(n=N, d=D, card=CARD, seed=SEED, b=B, k=K, ef=EF,
                         M=M, m_beta=M_BETA, tol=TOL,
-                        selectivities=sorted(SELECTIVITIES)),
+                        selectivities=sorted(SELECTIVITIES),
+                        engine_shards=list(ENGINE_SHARDS)),
             table=table,
         )
         with open(GOLDEN_PATH, "w") as f:
