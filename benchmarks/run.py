@@ -28,6 +28,8 @@ MODULES = [
     ("bench_sharded_search", "Sharded search: device-count x batch QPS"),
     ("bench_corpus_sharded", "Corpus-sharded SPMD: mesh-shape x batch QPS"),
     ("bench_neighbor_expand", "Neighbor expansion: strategy x cap x impl"),
+    ("bench_predicate_compile",
+     "Predicate programs: host mask path vs compiled on-device"),
 ]
 
 

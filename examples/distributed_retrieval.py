@@ -19,15 +19,19 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.data import make_hcps_dataset, make_workload
-from repro.core import evaluate_batch, masked_topk, recall_at_k
+from repro.core import compile_predicates, masked_topk, recall_at_k
 
 print(f"devices: {len(jax.devices())}")
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 
-# corpus: an HCPS dataset's vectors; predicates -> masks
+# corpus: an HCPS dataset's vectors; predicates compile once into a fused
+# columnar program — one on-device pass yields the whole batch's masks
+# (the query-plan API; evaluate_batch's per-predicate host loop is the
+# deprecated path)
 ds = make_hcps_dataset(n=8192, d=32, seed=0)
 wl = make_workload(ds, kind="contains", n_queries=32, k=10, seed=1)
-masks = evaluate_batch(wl.predicates, ds.table)
+program = compile_predicates(wl.predicates, ds.table)
+masks = program.evaluate(ds.table)
 
 # the ACORN distributed brute-force/pre-filter serving step (acorn config)
 arch = get_arch("acorn")

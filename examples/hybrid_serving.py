@@ -2,13 +2,18 @@
 sharded ACORN indices, request batching, cost-based routing, straggler
 mitigation, shard failure + rebuild — then a recall/QPS report.
 
+Uses the query-plan API: requests are SearchRequest values, execution
+policy is one ExecutionSpec on the EngineConfig, and each batch's
+predicates compile once into a fused program shared by every shard (the
+SPMD mesh path evaluates it in-program against shard-resident columns).
+
   PYTHONPATH=src python examples/hybrid_serving.py
 """
 import time
 
 import numpy as np
 
-from repro.core import AcornConfig, recall_at_k
+from repro.core import AcornConfig, ExecutionSpec, SearchRequest, recall_at_k
 from repro.data import make_hcps_dataset, make_workload
 from repro.serve import EngineConfig, ServingEngine
 
@@ -16,9 +21,11 @@ ds = make_hcps_dataset(n=8000, d=32, seed=0)
 acorn = AcornConfig(M=16, gamma=12, m_beta=32, ef_search=96)
 engine = ServingEngine(ds.x, ds.table, acorn,
                        EngineConfig(batch_size=32, k=10, n_shards=4,
-                                    duplicate_dispatch=True))
+                                    duplicate_dispatch=True,
+                                    spec=ExecutionSpec()))
 print(f"engine up: {len(engine.shards)} shards x "
-      f"{engine.shards[0].index.x.shape[0]} vectors")
+      f"{engine.shards[0].index.x.shape[0]} vectors | "
+      f"spec: {engine.execution_spec()}")
 
 # a mixed request stream: keyword filters with all three correlation regimes
 streams = [make_workload(ds, kind="contains", correlation=c, n_queries=64,
@@ -26,8 +33,9 @@ streams = [make_workload(ds, kind="contains", correlation=c, n_queries=64,
            for s, c in enumerate(["pos", "none", "neg"])]
 
 for wl in streams:
+    req = SearchRequest(xq=wl.xq, predicates=wl.predicates, k=10)
     t0 = time.perf_counter()
-    ids, dists = engine.serve(wl.xq, wl.predicates)
+    ids, dists = engine.serve(req)
     dt = time.perf_counter() - t0
     print(f"{wl.name:15s} recall@10={recall_at_k(ids, wl.gt(ds)):.3f} "
           f"qps={64 / dt:7.1f} routes(pre/graph)="
@@ -35,13 +43,14 @@ for wl in streams:
 
 # fault tolerance drill: kill a shard, serve through mirrors, rebuild
 wl = streams[1]
-base_ids, _ = engine.serve(wl.xq, wl.predicates)
+req = SearchRequest(xq=wl.xq, predicates=wl.predicates, k=10)
+base_ids, _ = engine.serve(req)
 engine.fail_shard(2)
-ids_failed, _ = engine.serve(wl.xq, wl.predicates)
+ids_failed, _ = engine.serve(req)
 same = np.array_equal(np.asarray(base_ids), np.asarray(ids_failed))
 print(f"shard 2 down -> duplicate dispatch served identical results: {same}")
 engine.rebuild_shard(2)
-ids_rebuilt, _ = engine.serve(wl.xq, wl.predicates)
+ids_rebuilt, _ = engine.serve(req)
 print(f"shard 2 rebuilt from source -> results identical: "
       f"{np.array_equal(np.asarray(base_ids), np.asarray(ids_rebuilt))}")
 print("engine stats:", engine.stats)

@@ -1,12 +1,13 @@
 """Quickstart: build an ACORN index over a multi-modal synthetic corpus and
-run hybrid queries (vector similarity + structured predicates).
+run hybrid queries (vector similarity + structured predicates) through the
+query-plan API: SearchRequest in, compiled predicate program underneath.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core import (AcornConfig, Between, ContainsAny, HybridIndex,
-                        recall_at_k)
+from repro.core import (AcornConfig, Between, ContainsAny, ExecutionSpec,
+                        HybridIndex, SearchRequest, recall_at_k)
 from repro.data import make_hcps_dataset, make_workload
 
 # 1. a corpus: vectors + keyword lists + dates + captions
@@ -21,14 +22,25 @@ print(f"ACORN-gamma built in {index.build_seconds:.1f}s | "
       f"index {index.index_bytes / 1e6:.1f} MB "
       f"(+{ds.x.size * 4 / 1e6:.1f} MB vectors)")
 
-# 3. hybrid queries: nearest images that contain a keyword AND a date range
+# 3. hybrid queries: nearest images that contain a keyword AND a date range.
+#    A SearchRequest bundles queries + predicates + k; the predicate trees
+#    compile into ONE fused on-device program (no per-predicate dispatch).
 wl = make_workload(ds, kind="contains+between", n_queries=16, k=10, seed=1)
-ids, dists, info = index.search(wl.xq, wl.predicates, k=10)
+request = SearchRequest(xq=wl.xq, predicates=wl.predicates, k=10)
+ids, dists, info = index.search(request)
 print(f"recall@10 = {recall_at_k(ids, wl.gt(ds)):.3f} | routes: "
-      f"{dict(zip(*__import__('numpy').unique(info['routes'], return_counts=True)))}")
+      f"{dict(zip(*np.unique(info['routes'], return_counts=True)))}")
 
-# 4. ad-hoc predicate composition — the set is unbounded by design
+# 3b. execution policy is one value — e.g. flip the Pallas kernels on:
+ids_k, _, _ = index.search(request, spec=ExecutionSpec(use_kernel=True,
+                                                       interpret=True))
+print("kernel path identical ids:",
+      bool((np.asarray(ids) == np.asarray(ids_k)).all()))
+
+# 4. ad-hoc predicate composition — the set is unbounded by design; a
+#    pre-compiled program can be reused across calls (index.compile)
 q = ds.x[123:124]
 pred = ContainsAny("keywords", (2, 7)) & Between("date", 30, 60)
-ids, dists, _ = index.search(q, [pred], k=5)
+program = index.compile([pred])
+ids, dists, _ = index.search(SearchRequest(xq=q, predicates=program, k=5))
 print("ad-hoc query top-5 ids:", ids[0].tolist())

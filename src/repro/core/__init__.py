@@ -3,6 +3,10 @@ from .predicates import (AttributeTable, Predicate, Equals, OneOf, Between,
                          ContainsAny, RegexMatch, And, Or, Not, TruePredicate,
                          SelectivitySketch, evaluate, evaluate_batch,
                          selectivity, pack_multihot)
+from .plan import (ExecutionSpec, PredicateProgram, SearchRequest,
+                   TableSchema, PackedColumns, compile_predicates,
+                   evaluate_program, evaluate_predicates, pack_columns,
+                   regex_aux)
 from .graph import LayeredGraph, assign_levels, neighbor_rows, memory_bytes
 from .bruteforce import masked_topk, ground_truth, recall_at_k, pairwise_sq_l2
 from .build import build_acorn_gamma, build_acorn_1, build_hnsw, build_bulk
@@ -19,7 +23,11 @@ __all__ = [
     "AttributeTable", "Predicate", "Equals", "OneOf", "Between",
     "ContainsAny", "RegexMatch", "And", "Or", "Not", "TruePredicate",
     "SelectivitySketch", "evaluate", "evaluate_batch", "selectivity",
-    "pack_multihot", "LayeredGraph", "assign_levels", "neighbor_rows",
+    "pack_multihot",
+    "ExecutionSpec", "PredicateProgram", "SearchRequest", "TableSchema",
+    "PackedColumns", "compile_predicates", "evaluate_program",
+    "evaluate_predicates", "pack_columns", "regex_aux",
+    "LayeredGraph", "assign_levels", "neighbor_rows",
     "memory_bytes", "masked_topk", "ground_truth", "recall_at_k",
     "pairwise_sq_l2", "build_acorn_gamma", "build_acorn_1", "build_hnsw",
     "build_bulk", "hybrid_search", "hybrid_search_sharded", "ann_search",

@@ -3,8 +3,15 @@
 Serving traffic arrives as ragged query sets; jit re-traces on every new
 batch shape.  ``search_batch`` pads each request to a small, fixed set of
 *jit buckets* and dispatches through a compiled-variant cache keyed on
-``(bucket, k, ef, variant, ...)`` so a steady-state server runs exactly one
-trace per (bucket, search-config) pair, no matter what request sizes arrive.
+``(bucket, k, ef, variant, ..., ExecutionSpec)`` so a steady-state server
+runs exactly one trace per (bucket, search-config) pair, no matter what
+request sizes arrive.
+
+Execution knobs (kernel routing + mesh shape) travel as ONE frozen
+:class:`repro.core.plan.ExecutionSpec` value — the resolved spec is the
+final component of every cache key, replacing the five loose knob kwargs
+that used to thread positionally through the pipeline.  The old kwargs
+remain accepted for one release behind a ``DeprecationWarning`` shim.
 
 Chunk planning minimizes padded compute with a small per-dispatch penalty
 (``DISPATCH_COST_QUERIES``): 37 queries against buckets {16, 64} run as
@@ -21,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from .graph import LayeredGraph
+from .plan import ExecutionSpec, resolve_execution_spec
 from .search import SearchStats, _search_impl
 
 Array = jax.Array
@@ -88,6 +96,10 @@ def plan_chunks(total: int, buckets: Tuple[int, ...],
 class VariantCache:
     """Compiled-variant cache: one jitted callable per (bucket, config) key.
 
+    Keys end with the resolved :class:`ExecutionSpec` (single-shard graph
+    dispatch) or ``(..., spec, "corpus")`` (corpus-sharded SPMD dispatch)
+    — the spec IS the execution-knob component, one hashable value.
+
     ``trace_counts`` counts *actual retraces* (incremented from inside the
     traced function, so cache hits at both layers cost zero) — the serving
     regression guard: a steady-state engine must show exactly one trace per
@@ -116,14 +128,19 @@ class VariantCache:
 
 _DEFAULT_CACHE = VariantCache()
 
+# distinguishes "legacy knob not passed" from an explicit legacy None
+# (which historically meant "all local devices" for data_parallel)
+_UNSET = object()
+
 
 def _build_variant(cache: VariantCache, key: tuple, statics: dict,
-                   has_mask: bool, data_parallel: int = 1) -> Callable:
-    if data_parallel > 1:
+                   has_mask: bool) -> Callable:
+    spec: ExecutionSpec = statics["spec"]
+    if spec.data_parallel > 1:
         # shard_map dispatch across the local 'data' mesh; queries + masks
         # sharded, graph/vectors replicated (distributed/query_parallel.py)
         from repro.distributed.query_parallel import sharded_search_fn
-        impl = sharded_search_fn(data_parallel, has_mask, statics)
+        impl = sharded_search_fn(spec.data_parallel, has_mask, statics)
     else:
         def impl(graph, x, xq, masks):
             return _search_impl(graph, x, xq, masks, **statics)
@@ -156,13 +173,14 @@ def search_batch(
     metric: str = "l2",
     compressed_level0: bool = True,
     max_expansions: int = 512,
-    use_kernel: bool = False,
-    interpret: bool = True,
-    expand_kernel: Optional[bool] = None,
+    spec: Optional[ExecutionSpec] = None,
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
     cache: Optional[VariantCache] = None,
-    data_parallel: Optional[int] = 1,
-    corpus_parallel: Optional[int] = 1,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    expand_kernel: Optional[bool] = None,
+    data_parallel=_UNSET,
+    corpus_parallel: Optional[int] = None,
 ) -> Tuple[Array, Array, SearchStats]:
     """Ragged-batch hybrid search through jit buckets.
 
@@ -173,33 +191,42 @@ def search_batch(
     variant — the predicate-aware lookup strategies need a mask, so without
     one the traversal degrades to the plain-HNSW neighbor scan.
 
-    ``data_parallel`` > 1 shards each bucket's queries across that many
-    local devices (clamped to the host's device count) via the shard_map
-    dispatch in ``repro.distributed.query_parallel``; bucket sizes are
-    rounded up to mesh-size multiples and results stay bit-identical to the
+    Execution policy rides in ``spec`` (:class:`repro.core.plan.
+    ExecutionSpec`); the five legacy knob kwargs still work behind a
+    ``DeprecationWarning`` shim for one release.  ``spec.data_parallel``
+    > 1 shards each bucket's queries across that many local devices
+    (clamped to the host's device count) via the shard_map dispatch in
+    ``repro.distributed.query_parallel``; bucket sizes are rounded up to
+    mesh-size multiples and results stay bit-identical to the
     single-device path.
 
-    ``expand_kernel`` routes the fused neighbor expansion through its
-    Pallas kernel (``None`` follows ``use_kernel``); the resolved value is
-    part of the compiled-variant cache key, like ``use_kernel``.
-
-    ``corpus_parallel`` is the corpus-mesh axis size and is recorded in
-    the variant-cache key, but must resolve to 1 here (``None``/``0``
-    mean 1): this entry point searches ONE corpus shard — a built graph
-    cannot be row-sharded post hoc, so multi-shard SPMD dispatch runs
-    per-shard graphs through ``repro.distributed.corpus_parallel.
+    ``spec.corpus_parallel`` must resolve to 1 here (``None``/``0`` mean
+    1): this entry point searches ONE corpus shard — a built graph cannot
+    be row-sharded post hoc, so multi-shard SPMD dispatch runs per-shard
+    graphs through ``repro.distributed.corpus_parallel.
     corpus_search_batch`` (whose cache keys carry the real mesh shape).
+
+    The variant-cache key is ``(bucket, k, ef, variant, m, m_beta, metric,
+    compressed_level0, max_expansions, has_mask, resolved_spec)`` — the
+    resolved spec is the single execution-knob component.
 
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     cache = _DEFAULT_CACHE if cache is None else cache
-    expand_kernel = use_kernel if expand_kernel is None else expand_kernel
-    if corpus_parallel not in (None, 0, 1):
+    if data_parallel is _UNSET:
+        legacy_dp = None  # knob not passed
+    else:
+        # historical semantics of the legacy knob: None / 0 = all devices
+        legacy_dp = 0 if data_parallel is None else data_parallel
+    spec = resolve_execution_spec(
+        spec, "search_batch", use_kernel=use_kernel, interpret=interpret,
+        expand_kernel=expand_kernel, data_parallel=legacy_dp,
+        corpus_parallel=corpus_parallel)
+    if spec.corpus_parallel not in (None, 0, 1):
         raise ValueError(
-            f"corpus_parallel={corpus_parallel}: search_batch searches a "
-            "single corpus shard; use repro.distributed.corpus_parallel."
+            f"corpus_parallel={spec.corpus_parallel}: search_batch searches "
+            "a single corpus shard; use repro.distributed.corpus_parallel."
             "corpus_search_batch (via ServingEngine) for a sharded corpus")
-    cp = 1
     if pass_masks is None:
         # documented unfiltered fallback: without a predicate mask the
         # filter/compress/two_hop strategies are undefined (they index the
@@ -207,9 +234,10 @@ def search_batch(
         variant = "hnsw"
         compressed_level0 = False
     dp = 1
-    if data_parallel != 1:  # None / 0 -> all local devices; N -> min(N, ndev)
+    if spec.data_parallel != 1:  # None/0 -> all local devices; N -> clamp
         from repro.distributed.query_parallel import resolve_data_parallel
-        dp = resolve_data_parallel(data_parallel)
+        dp = resolve_data_parallel(spec.data_parallel)
+    spec = spec.resolve(data_parallel=dp, corpus_parallel=1)
     total = xq.shape[0]
     if total == 0:
         z = jnp.zeros((0,), jnp.int32)
@@ -217,8 +245,7 @@ def search_batch(
                 SearchStats(dist_comps=z, hops=z))
     statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
                    metric=metric, compressed_level0=compressed_level0,
-                   max_expansions=max_expansions, use_kernel=use_kernel,
-                   interpret=interpret, expand_kernel=expand_kernel)
+                   max_expansions=max_expansions, spec=spec)
     outs: List[Tuple[Array, Array, Array, Array]] = []
     start = 0
     for take, bucket in plan_chunks(total, buckets, multiple_of=dp):
@@ -229,10 +256,9 @@ def search_batch(
             if msk is not None:
                 msk = pad_rows(msk, bucket - take)
         key = (bucket, k, ef, variant, m, m_beta, metric, compressed_level0,
-               max_expansions, use_kernel, interpret, expand_kernel,
-               msk is not None, cp, dp)
+               max_expansions, msk is not None, spec)
         fn = cache.get(key, lambda: _build_variant(
-            cache, key, statics, has_mask=msk is not None, data_parallel=dp))
+            cache, key, statics, has_mask=msk is not None))
         ids, d, stats = fn(graph, x, q, msk)
         outs.append((ids[:take], d[:take], stats.dist_comps[:take],
                      stats.hops[:take]))

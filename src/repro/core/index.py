@@ -4,12 +4,22 @@
 selectivity sketch, and implements the paper's routing rule: queries whose
 estimated selectivity falls below s_min = 1/γ are answered by pre-filtered
 brute force (exact); all others traverse the predicate subgraph.
+
+Query-plan API: :meth:`HybridIndex.search` takes a
+:class:`repro.core.plan.SearchRequest` (queries + predicate trees or a
+pre-compiled :class:`PredicateProgram` + k/ef/route) plus an optional
+:class:`ExecutionSpec`.  Predicates compile ONCE into a fused columnar
+program: one on-device pass yields every query's pass-mask, and one more
+pass over the selectivity-sketch sample yields every routing estimate —
+replacing the legacy per-predicate host↔device round trips.  The old
+``search(xq, predicates, ..., use_kernel=...)`` call style keeps working
+(knob kwargs behind a ``DeprecationWarning`` shim for one release).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +30,10 @@ from .batched import (DEFAULT_BUCKETS, VariantCache, pad_rows, plan_chunks,
                       search_batch)
 from .build import build_acorn_1, build_acorn_gamma
 from .graph import INVALID, LayeredGraph, memory_bytes
-from .predicates import (AttributeTable, Predicate, SelectivitySketch,
-                         evaluate_batch)
+from .plan import (ExecutionSpec, PredicateProgram, SearchRequest,
+                   compile_predicates, resolve_execution_spec)
+from .predicates import (AttributeTable, Predicate, SelectivitySketch)
+
 Array = jax.Array
 
 
@@ -35,7 +47,8 @@ class AcornConfig:
     metric: str = "l2"
     compress: bool = True
     max_expansions: int = 512
-    # execution knobs (batched kernel-fused pipeline)
+    # execution knobs (batched kernel-fused pipeline); bundled on demand
+    # into an ExecutionSpec by .execution_spec()
     use_kernel: bool = False           # gather_distance Pallas kernel
     interpret: bool = True             # interpret=True runs the kernel on CPU
     # neighbor_expand Pallas kernel (fused 2-hop gather/filter/dedup/pack);
@@ -58,6 +71,14 @@ class AcornConfig:
 
     def resolved_m_beta(self) -> int:
         return self.m_beta if self.m_beta is not None else 2 * self.M
+
+    def execution_spec(self) -> ExecutionSpec:
+        """This config's execution knobs as one frozen ExecutionSpec."""
+        return ExecutionSpec(
+            use_kernel=self.use_kernel, interpret=self.interpret,
+            expand_kernel=self.expand_kernel,
+            data_parallel=self.data_parallel,
+            corpus_parallel=self.corpus_parallel)
 
 
 @dataclass
@@ -129,13 +150,19 @@ class HybridIndex:
         return out_ids, out_d
 
     # ------------------------------------------------------------------
+    def compile(self, predicates: Sequence[Predicate]) -> PredicateProgram:
+        """Compile predicate trees against this index's table schema."""
+        return compile_predicates(predicates, self.table)
+
+    # ------------------------------------------------------------------
     def search(
         self,
-        xq: Array,
-        predicates: Sequence[Predicate],
+        request: Union[SearchRequest, Array],
+        predicates: Union[Sequence[Predicate], PredicateProgram, None] = None,
         k: int = 10,
         ef: Optional[int] = None,
         force_route: Optional[str] = None,
+        spec: Optional[ExecutionSpec] = None,
         use_kernel: Optional[bool] = None,
         interpret: Optional[bool] = None,
         expand_kernel: Optional[bool] = None,
@@ -144,42 +171,95 @@ class HybridIndex:
     ) -> Tuple[Array, Array, dict]:
         """Batched hybrid search with per-query cost-based routing.
 
+        New call style::
+
+            index.search(SearchRequest(xq=q, predicates=preds, k=10),
+                         spec=ExecutionSpec(use_kernel=True))
+
+        ``request.predicates`` may be predicate trees (compiled here, one
+        fused mask + estimate pass each) or a pre-compiled
+        :class:`PredicateProgram` (compile once, search everywhere — the
+        serving engine shares one program across shards).  ``spec=None``
+        defers to ``config.execution_spec()``; a given spec's ``None``
+        fields resolve the usual way (``expand_kernel`` follows
+        ``use_kernel``); ``corpus_parallel`` must resolve to 1 here: one
+        HybridIndex is one corpus shard — multi-shard SPMD dispatch lives
+        in ``repro.distributed.corpus_parallel`` / ``ServingEngine``.
+
+        Legacy call style ``search(xq, predicates, k=..., use_kernel=...)``
+        still works: bare positional queries wrap into a request, and the
+        five knob kwargs fold into a spec behind a ``DeprecationWarning``
+        (one release of shim support).
+
         Both routes dispatch through the jit-bucketed batch pipeline: the
         graph route via :func:`repro.core.batched.search_batch` (with this
         index's compiled-variant cache), the pre-filter route through the
         same bucket padding — so ragged request sizes never re-trace.
-        ``use_kernel``/``interpret``/``expand_kernel``/``data_parallel``
-        override the config knobs per call (``None`` defers to the config;
-        a config ``expand_kernel`` of ``None`` in turn follows
-        ``use_kernel``; pass ``data_parallel=0`` to request all local
-        devices explicitly).  ``corpus_parallel`` is recorded in the
-        compiled-variant cache keys but must resolve to 1 here: one
-        HybridIndex is one corpus shard — multi-shard SPMD dispatch lives
-        in ``repro.distributed.corpus_parallel`` / ``ServingEngine``
-        (``None`` means 1; the AcornConfig knob is engine-level and is
-        deliberately NOT consulted).
 
         Returns (ids (B,k), dists (B,k), info) where info records the route
         taken per query and search stats.
         """
         cfg = self.config
+        if isinstance(request, SearchRequest):
+            if predicates is not None:
+                raise TypeError(
+                    "pass predicates inside the SearchRequest, not alongside")
+            xq = request.xq
+            predicates = request.predicates
+            k = request.k if request.k is not None else k
+            ef = request.ef if request.ef is not None else ef
+            force_route = (request.route if request.route is not None
+                           else force_route)
+        else:
+            xq = request
         ef = ef or cfg.ef_search
-        use_kernel = cfg.use_kernel if use_kernel is None else use_kernel
-        interpret = cfg.interpret if interpret is None else interpret
-        expand_kernel = (cfg.expand_kernel if expand_kernel is None
-                         else expand_kernel)
-        data_parallel = (cfg.data_parallel if data_parallel is None
-                         else data_parallel)
-        masks = evaluate_batch(predicates, self.table)  # (B, n)
-        s_est = np.array([self.sketch.estimate(p) for p in predicates])
+        # base spec from config, except corpus_parallel: that AcornConfig
+        # knob is engine-level geometry and deliberately NOT consulted here
+        # — one HybridIndex is one corpus shard, so the field must resolve
+        # to 1 (an explicit multi-shard request still fails loudly in
+        # search_batch)
+        base = replace(cfg.execution_spec(), corpus_parallel=None)
+        spec = resolve_execution_spec(
+            spec, "HybridIndex.search", base=base,
+            use_kernel=use_kernel, interpret=interpret,
+            expand_kernel=expand_kernel, data_parallel=data_parallel,
+            corpus_parallel=corpus_parallel)
+
+        b = xq.shape[0]
+        if predicates is None:
+            if force_route == "prefilter":
+                raise ValueError(
+                    "route='prefilter' (exact masked brute force) needs "
+                    "predicates; pass TruePredicate() per query for an "
+                    "explicit match-all")
+            # unfiltered ANN: the plain-HNSW substrate (search_batch's
+            # documented pass_masks=None fallback); no routing to price
+            ids, d, stats = search_batch(
+                self.graph, self.x, xq, None, k=k, ef=ef,
+                variant=cfg.variant, m=cfg.M, m_beta=cfg.resolved_m_beta(),
+                metric=cfg.metric, compressed_level0=False,
+                max_expansions=cfg.max_expansions, spec=spec,
+                buckets=cfg.buckets, cache=self.cache)
+            info = dict(routes=np.full((b,), "graph"),
+                        selectivity_est=np.ones((b,)),
+                        dist_comps=np.asarray(stats.dist_comps))
+            return ids, d, info
+
+        # -- compile once: one fused pass for masks, one for estimates --
+        program = (predicates if isinstance(predicates, PredicateProgram)
+                   else compile_predicates(predicates, self.table))
+        if program.n_queries != b:
+            raise ValueError(
+                f"{b} queries but {program.n_queries} predicates")
+        masks = program.evaluate(self.table)          # (B, n), one pass
+        s_est = self.sketch.estimate_batch(program)   # (B,), one pass
         if force_route == "graph":
-            use_pre = np.zeros(len(predicates), bool)
+            use_pre = np.zeros(b, bool)
         elif force_route == "prefilter":
-            use_pre = np.ones(len(predicates), bool)
+            use_pre = np.ones(b, bool)
         else:
             use_pre = s_est < cfg.s_min
 
-        b = xq.shape[0]
         out_ids = np.full((b, k), INVALID, np.int32)
         out_d = np.full((b, k), np.inf, np.float32)
         dist_comps = np.zeros((b,), np.int64)
@@ -198,11 +278,8 @@ class HybridIndex:
                 variant=variant, m=cfg.M, m_beta=cfg.resolved_m_beta(),
                 metric=cfg.metric,
                 compressed_level0=cfg.compress and variant == "acorn-gamma",
-                max_expansions=cfg.max_expansions, use_kernel=use_kernel,
-                interpret=interpret, expand_kernel=expand_kernel,
-                buckets=cfg.buckets, cache=self.cache,
-                data_parallel=data_parallel,
-                corpus_parallel=corpus_parallel)
+                max_expansions=cfg.max_expansions, spec=spec,
+                buckets=cfg.buckets, cache=self.cache)
             out_ids[gr_idx] = np.asarray(ids)
             out_d[gr_idx] = np.asarray(d)
             dist_comps[gr_idx] = np.asarray(stats.dist_comps)

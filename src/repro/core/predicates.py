@@ -17,7 +17,7 @@ one operator with no XLA representation; it is evaluated host-side with
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Mapping, Tuple, Union
 
 import jax
@@ -31,6 +31,30 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 _BITS = 32
+
+# compiled-regex cache: patterns repeat across queries/tables; ``re.compile``
+# once per distinct pattern, process-wide.  The predicate set is unbounded
+# by design, so every query-content-keyed cache in this module is bounded
+# with FIFO eviction — an adversarial stream of distinct patterns must not
+# grow memory without limit.
+_RE_CACHE: Dict[str, "re.Pattern"] = {}
+_RE_CACHE_MAX = 1024
+# per-table (column, pattern) mask entries (AttributeTable.regex_mask)
+REGEX_MASK_CACHE_MAX = 256
+
+
+def _fifo_put(cache: Dict, key, value, cap: int) -> None:
+    if len(cache) >= cap:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
+def _compiled_regex(pattern: str) -> "re.Pattern":
+    rx = _RE_CACHE.get(pattern)
+    if rx is None:
+        rx = re.compile(pattern)
+        _fifo_put(_RE_CACHE, pattern, rx, _RE_CACHE_MAX)
+    return rx
 
 
 def pack_multihot(keyword_lists, n_keywords: int) -> np.ndarray:
@@ -66,6 +90,10 @@ class AttributeTable:
     bitset_cols: Dict[str, Array]
     str_cols: Dict[str, np.ndarray]
     n_keywords: Dict[str, int]
+    # per-table plan-evaluation caches (never part of equality/printing):
+    #   'regex'  -> {(column, pattern): (n,) np.bool_ mask}
+    #   'packed' -> (TableSchema, PackedColumns)  [core/plan.py]
+    _plan_cache: Dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
     def n(self) -> int:
@@ -77,14 +105,37 @@ class AttributeTable:
             return int(len(c))
         raise ValueError("empty AttributeTable")
 
+    def regex_mask(self, column: str, pattern: str) -> np.ndarray:
+        """Host-evaluated ``pattern`` over ``str_cols[column]`` as a (n,)
+        bool mask, cached by ``(column, pattern)`` — repeated RegexMatch
+        queries stop rescanning the full string column, and the compiled
+        ``re`` object is shared process-wide."""
+        cache = self._plan_cache.setdefault("regex", {})
+        key = (column, pattern)
+        mask = cache.get(key)
+        if mask is None:
+            rx = _compiled_regex(pattern)
+            col = self.str_cols[column]
+            mask = np.fromiter((rx.search(s) is not None for s in col),
+                               dtype=bool, count=len(col))
+            _fifo_put(cache, key, mask, REGEX_MASK_CACHE_MAX)
+        return mask
+
     def take(self, idx: np.ndarray) -> "AttributeTable":
-        return AttributeTable(
+        idx = np.asarray(idx)
+        sub = AttributeTable(
             int_cols={k: v[idx] for k, v in self.int_cols.items()},
             bitset_cols={k: v[idx] for k, v in self.bitset_cols.items()},
-            str_cols={k: np.asarray(v, dtype=object)[np.asarray(idx)]
+            str_cols={k: np.asarray(v, dtype=object)[idx]
                       for k, v in self.str_cols.items()},
             n_keywords=dict(self.n_keywords),
         )
+        # regex leaf masks slice row-wise: the sliced table (selectivity
+        # sample, corpus shard) inherits the scan instead of redoing it
+        parent = self._plan_cache.get("regex")
+        if parent:
+            sub._plan_cache["regex"] = {k: v[idx] for k, v in parent.items()}
+        return sub
 
 
 # ---------------------------------------------------------------------------
@@ -211,11 +262,7 @@ def evaluate(pred: Predicate, table: AttributeTable) -> Array:
         )
         return ((col & q[None, :]) != 0).any(axis=-1)
     if isinstance(pred, RegexMatch):
-        rx = re.compile(pred.pattern)
-        col = table.str_cols[pred.column]
-        mask = np.fromiter((rx.search(s) is not None for s in col),
-                           dtype=bool, count=len(col))
-        return jnp.asarray(mask)
+        return jnp.asarray(table.regex_mask(pred.column, pred.pattern))
     if isinstance(pred, And):
         out = evaluate(pred.parts[0], table)
         for p in pred.parts[1:]:
@@ -268,4 +315,22 @@ class SelectivitySketch:
         return SelectivitySketch(sample=table.take(idx), n_total=n)
 
     def estimate(self, pred: Predicate) -> float:
-        return selectivity(pred, self.sample)
+        return float(self.estimate_batch([pred])[0])
+
+    def estimate_batch(self, preds) -> np.ndarray:
+        """Estimate a whole batch's selectivities in ONE fused device call.
+
+        ``preds`` is a sequence of predicate trees or a pre-compiled
+        ``PredicateProgram`` (core/plan.py).  The compiled program runs
+        over the sketch sample in a single batched pass — replacing the
+        one host↔device round trip per predicate the per-``estimate``
+        loop used to cost on every ``HybridIndex.search`` call.  Returns
+        (B,) float64; values are bit-identical to the legacy per-predicate
+        path (bool means over <2^24 rows are exact in any dtype/order).
+        """
+        from .plan import PredicateProgram, compile_predicates
+        prog = (preds if isinstance(preds, PredicateProgram)
+                else compile_predicates(preds, self.sample))
+        mask = prog.evaluate(self.sample)
+        return np.asarray(jnp.mean(mask.astype(jnp.float32), axis=1),
+                          dtype=np.float64)

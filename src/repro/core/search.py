@@ -50,6 +50,7 @@ from repro.kernels.gather_distance.ref import gather_distance_ref
 from repro.kernels.neighbor_expand.ops import neighbor_expand
 
 from .graph import INVALID, LayeredGraph, neighbor_rows
+from .plan import ExecutionSpec, resolve_execution_spec
 
 Array = jax.Array
 
@@ -235,16 +236,17 @@ def _search_impl(
     metric: str,
     compressed_level0: bool,
     max_expansions: int,
-    use_kernel: bool,
-    interpret: bool,
-    expand_kernel: Optional[bool] = None,
+    spec: ExecutionSpec = ExecutionSpec(),
 ) -> Tuple[Array, Array, SearchStats]:
     """Batched hybrid search: xq (B, d), pass_mask (B, n) or None.
 
-    ``expand_kernel`` routes the neighbor-expansion fusion through its
-    Pallas kernel; ``None`` follows ``use_kernel`` (one switch flips the
-    whole kernel-fused pipeline)."""
-    expand_kernel = use_kernel if expand_kernel is None else expand_kernel
+    ``spec`` carries the kernel-routing knobs (``use_kernel``/
+    ``interpret``/``expand_kernel``; an unresolved ``expand_kernel`` of
+    ``None`` follows ``use_kernel`` — one switch flips the whole
+    kernel-fused pipeline).  The mesh fields are dispatch-layer policy
+    and are ignored here."""
+    use_kernel, interpret = spec.use_kernel, spec.interpret
+    expand_kernel = spec.resolved_expand_kernel()
     b = xq.shape[0]
     n = x.shape[0]
     top = graph.num_levels - 1
@@ -364,9 +366,15 @@ def _search_impl(
 @functools.partial(
     jax.jit,
     static_argnames=("k", "ef", "variant", "m", "m_beta", "metric",
-                     "compressed_level0", "max_expansions", "use_kernel",
-                     "interpret", "expand_kernel"),
+                     "compressed_level0", "max_expansions", "spec"),
 )
+def _hybrid_search_jit(graph, x, xq, pass_mask, k, ef, variant, m, m_beta,
+                       metric, compressed_level0, max_expansions, spec):
+    return _search_impl(
+        graph, x, xq, pass_mask, k, ef, variant, m, m_beta, metric,
+        compressed_level0, max_expansions, spec)
+
+
 def hybrid_search(
     graph: LayeredGraph,
     x: Array,
@@ -380,25 +388,34 @@ def hybrid_search(
     metric: str = "l2",
     compressed_level0: bool = True,
     max_expansions: int = 512,
-    use_kernel: bool = False,
-    interpret: bool = True,
+    spec: Optional[ExecutionSpec] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
     expand_kernel: Optional[bool] = None,
 ):
     """Batched hybrid search.
 
     xq: (B, d) queries; pass_mask: (B, n) predicate masks.
-    ``use_kernel`` routes distance computations through the gather_distance
-    Pallas kernel and (by default) neighbor expansion through the
-    neighbor_expand kernel (``interpret=True`` for CPU execution; compiled
-    on TPU); ``use_kernel=False`` is the pure-jnp reference path — both
-    return identical neighbor ids.  ``expand_kernel`` overrides the
-    expansion routing alone (``None`` follows ``use_kernel``).
+    Execution knobs ride in ``spec`` (:class:`repro.core.plan.
+    ExecutionSpec`): ``spec.use_kernel`` routes distance computations
+    through the gather_distance Pallas kernel and (by default) neighbor
+    expansion through the neighbor_expand kernel (``spec.interpret=True``
+    for CPU execution; compiled on TPU); the default spec is the pure-jnp
+    reference path — both return identical neighbor ids.
+    ``use_kernel``/``interpret``/``expand_kernel`` remain as a deprecated
+    kwarg shim for one release (they warn and fold into a spec).
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
-    return _search_impl(
-        graph, x, xq, pass_mask, k, ef, variant, m, m_beta, metric,
-        compressed_level0, max_expansions, use_kernel, interpret,
-        expand_kernel)
+    spec = resolve_execution_spec(
+        spec, "hybrid_search", use_kernel=use_kernel, interpret=interpret,
+        expand_kernel=expand_kernel)
+    # mesh fields pinned: this is the single-device entry point, so specs
+    # differing only in dispatch-layer mesh shape share one trace
+    return _hybrid_search_jit(graph, x, xq, pass_mask, k, ef, variant, m,
+                              m_beta, metric, compressed_level0,
+                              max_expansions,
+                              spec.resolve(data_parallel=1,
+                                           corpus_parallel=1))
 
 
 # mesh-aware variants: one jitted shard_map callable per (mesh, config)
@@ -419,16 +436,23 @@ def hybrid_search_sharded(
     metric: str = "l2",
     compressed_level0: bool = True,
     max_expansions: int = 512,
-    use_kernel: bool = False,
-    interpret: bool = True,
+    spec: Optional[ExecutionSpec] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
     expand_kernel: Optional[bool] = None,
 ):
     """Mesh-aware :func:`hybrid_search`: queries sharded across devices.
 
-    Shards ``xq``/``pass_mask`` over a 1-D ``data`` mesh of
-    ``data_parallel`` local devices (``None`` -> all of them; clamped to
-    the host's device count) with the graph and vectors replicated, via
-    ``repro.distributed.query_parallel``.  ``xq`` is padded up to a mesh
+    Shards ``xq``/``pass_mask`` over a 1-D ``data`` mesh of local devices
+    with the graph and vectors replicated, via
+    ``repro.distributed.query_parallel``.  The mesh size comes from
+    ``spec.data_parallel`` (``None``/``0`` -> all local devices; clamped
+    to the host's count).  NOTE: with no ``spec`` at all this entry
+    point's historical default is ALL local devices, but an explicit
+    ``spec=ExecutionSpec()`` means what it says — ``data_parallel=1``,
+    single device; pass ``ExecutionSpec(data_parallel=0)`` to shard over
+    every local device.  The positional ``data_parallel`` arg and the
+    kernel knob kwargs are the deprecated shim.  ``xq`` is padded up to a mesh
     multiple (padding lanes discarded), and results are bit-identical to
     the single-device path.  ``pass_mask=None`` runs the unfiltered
     plain-HNSW substrate, as in :func:`repro.core.batched.search_batch`.
@@ -436,19 +460,28 @@ def hybrid_search_sharded(
     from repro.distributed.query_parallel import (pad_to_multiple,
                                                   resolve_data_parallel,
                                                   sharded_search_fn)
+    spec_given = spec is not None
+    spec = resolve_execution_spec(
+        spec, "hybrid_search_sharded", use_kernel=use_kernel,
+        interpret=interpret, expand_kernel=expand_kernel,
+        data_parallel=data_parallel)
+    if not spec_given and data_parallel is None:
+        # historical default of this entry point: all local devices
+        spec = spec.overlay(data_parallel=0)
     if pass_mask is None:
         variant, compressed_level0 = "hnsw", False
+    dp = resolve_data_parallel(spec.data_parallel)
+    local_spec = spec.resolve(data_parallel=dp, corpus_parallel=1)
     statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
                    metric=metric, compressed_level0=compressed_level0,
-                   max_expansions=max_expansions, use_kernel=use_kernel,
-                   interpret=interpret,
-                   expand_kernel=(use_kernel if expand_kernel is None
-                                  else expand_kernel))
-    dp = resolve_data_parallel(data_parallel)
+                   max_expansions=max_expansions, spec=local_spec)
     b = xq.shape[0]
     if dp <= 1 or b == 0:
-        return hybrid_search(graph, x, xq, pass_mask, **statics)
-    key = (dp, pass_mask is not None, tuple(sorted(statics.items())))
+        return hybrid_search(graph, x, xq, pass_mask, spec=local_spec,
+                             **{k_: v for k_, v in statics.items()
+                                if k_ != "spec"})
+    key = (dp, pass_mask is not None, tuple(sorted(
+        (k_, v) for k_, v in statics.items())))
     fn = _SHARDED_FNS.get(key)
     if fn is None:
         fn = _SHARDED_FNS[key] = jax.jit(
@@ -464,11 +497,6 @@ def hybrid_search_sharded(
                                        hops=st.hops[:b])
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "ef", "m", "metric", "max_expansions", "use_kernel",
-                     "interpret"),
-)
 def ann_search(
     graph: LayeredGraph,
     x: Array,
@@ -478,10 +506,17 @@ def ann_search(
     m: int = 32,
     metric: str = "l2",
     max_expansions: int = 512,
-    use_kernel: bool = False,
-    interpret: bool = True,
+    spec: Optional[ExecutionSpec] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ):
-    """Plain (unfiltered) HNSW ANN search — baseline substrate."""
-    return _search_impl(
-        graph, x, xq, None, k, ef, "hnsw", m, 0, metric, False,
-        max_expansions, use_kernel, interpret)
+    """Plain (unfiltered) HNSW ANN search — baseline substrate.
+
+    Execution knobs ride in ``spec``; the ``use_kernel``/``interpret``
+    kwargs are the deprecated shim (one release)."""
+    spec = resolve_execution_spec(
+        spec, "ann_search", use_kernel=use_kernel, interpret=interpret)
+    return _hybrid_search_jit(graph, x, xq, None, k, ef, "hnsw", m, 0,
+                              metric, False, max_expansions,
+                              spec.resolve(data_parallel=1,
+                                           corpus_parallel=1))

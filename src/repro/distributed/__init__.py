@@ -5,7 +5,7 @@ from repro.core.batched import mesh_buckets
 from .collectives import gathered_topk_merge, merge_topk, sharded_topk
 from .corpus_parallel import (ShardedCorpus, corpus_mesh, corpus_search_batch,
                               corpus_search_fn, resolve_corpus_mesh_shape,
-                              shard_slice, stack_corpus)
+                              shard_slice, stack_corpus, stack_regex_aux)
 from .query_parallel import (data_mesh, local_device_count,
                              resolve_data_parallel, sharded_search_fn)
 
@@ -14,4 +14,5 @@ __all__ = [
     "data_mesh", "gathered_topk_merge", "local_device_count", "merge_topk",
     "mesh_buckets", "resolve_corpus_mesh_shape", "resolve_data_parallel",
     "shard_slice", "sharded_search_fn", "sharded_topk", "stack_corpus",
+    "stack_regex_aux",
 ]

@@ -6,13 +6,24 @@ merged with ``jnp.concatenate``.  Here the whole fan-out runs as ONE SPMD
 program on a 2-D ``(data, corpus)`` mesh:
 
   * the corpus is sharded along ``corpus`` — per-shard vectors, graph
-    neighbor tables, and attribute pass-masks are stacked on a leading
-    shard axis (:class:`ShardedCorpus`, shapes padded to a common envelope
-    so every shard is one slice of the same arrays) and split one shard per
-    corpus-mesh device;
+    neighbor tables, AND the packed attribute columns are stacked on a
+    leading shard axis (:class:`ShardedCorpus`, shapes padded to a common
+    envelope so every shard is one slice of the same arrays) and split one
+    shard per corpus-mesh device;
   * queries are sharded along ``data`` and replicated along ``corpus`` —
     every corpus shard answers every query, split across data devices for
     throughput (the same query-parallel win ``query_parallel`` buys);
+  * predicates arrive as a compiled :class:`repro.core.plan.
+    PredicateProgram` — per-query instruction rows sharded along ``data``
+    like the queries — plus per-shard ``aux`` regex-leaf bitmaps sharded
+    along ``corpus``.  Each device evaluates its own shard's pass-masks
+    IN-PROGRAM against its shard-resident columns
+    (:func:`repro.core.plan.evaluate_program`), so the host never
+    materializes or transfers a ``(B, n_shard)`` mask per shard — queries
+    carry compiled predicate operands, not masks.  This is the
+    predicate-inside-the-plan placement NaviX / the GPU all-in-one index
+    argue for, and the prerequisite for multi-host serving where a host
+    ``(B, n_total)`` mask cannot exist;
   * each device runs the batched ACORN search (``core.search._search_impl``)
     on its local shard, converts local row ids to global ids with its
     shard's base offset, and the cross-shard top-k merge is a native
@@ -25,9 +36,13 @@ count / row count / neighbor cap across shards with ``-1`` (and vectors
 with zero rows).  Padded levels have an all ``-1`` ``pos`` table, so every
 lookup degrades to an empty neighbor row and the greedy descent freezes
 immediately without a distance computation; padded rows never appear in
-any neighbor table, so they are never visited or scored.  Per-shard
-results are therefore bit-identical to searching the shard's own unpadded
-graph (asserted directly in tests/test_corpus_parallel.py).
+any neighbor table, so they are never visited or scored.  Padded
+*attribute* rows are zero-filled and could spuriously satisfy a predicate
+(label 0 is a real value), so the in-program evaluation masks rows
+``>= n_rows`` to False — exactly the zero-initialized tail the host-side
+mask embedding used to produce.  Per-shard results are therefore
+bit-identical to searching the shard's own unpadded graph (asserted
+directly in tests/test_corpus_parallel.py).
 
 Fault injection and routing ride in as data, not control flow: an
 ``alive`` (S,) mask zeroes a failed shard's candidates before the merge
@@ -35,6 +50,10 @@ Fault injection and routing ride in as data, not control flow: an
 query) pre-filter routing decisions select host-computed exact brute-force
 results over the graph search inside the kernel, keeping ACORN's §5.2
 cost-based router bit-identical to the host path.
+
+Execution policy is ONE resolved :class:`repro.core.plan.ExecutionSpec`
+(``data_parallel`` × ``corpus_parallel`` = the mesh shape); it terminates
+every variant-cache key as ``(..., program_shape_sig, spec, "corpus")``.
 
 Local testing recipe (XLA fixes the host device count at first init):
 
@@ -53,6 +72,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.batched import VariantCache, pad_rows, plan_chunks
 from repro.core.graph import INVALID, LayeredGraph
+from repro.core.plan import (ExecutionSpec, PackedColumns, PredicateProgram,
+                             TableSchema, evaluate_program, pack_columns,
+                             regex_aux)
 from repro.core.search import _search_impl
 
 from .collectives import gathered_topk_merge
@@ -69,12 +91,18 @@ class ShardedCorpus(NamedTuple):
 
     Every leaf carries the shard axis first, so a single ``P("corpus")``
     prefix spec splits the whole structure one shard per corpus device.
+    ``columns`` holds the shard-resident packed attribute columns
+    (``ints (S, C_int, n_max)``, ``bitsets (S, C_bit, n_max, W)``) the
+    SPMD kernel evaluates compiled predicate programs against; ``None``
+    when the corpus was stacked without tables (graph-only parity
+    harnesses) — such a corpus cannot serve predicate programs.
     """
 
     graph: LayeredGraph  # every leaf stacked: (S, ...)
     x: Array             # (S, n_max, d) vectors, zero-padded rows
     bases: Array         # (S,) int32 global row offset per shard
     n_rows: Array        # (S,) int32 valid rows per shard
+    columns: Optional[PackedColumns] = None  # stacked: leaves (S, ...)
 
     @property
     def n_shards(self) -> int:
@@ -82,13 +110,18 @@ class ShardedCorpus(NamedTuple):
 
 
 def stack_corpus(graphs: Sequence[LayeredGraph], xs: Sequence[Array],
-                 bases: Sequence[int]) -> ShardedCorpus:
-    """Stack per-shard graphs/vectors into one :class:`ShardedCorpus`.
+                 bases: Sequence[int],
+                 tables: Optional[Sequence] = None) -> ShardedCorpus:
+    """Stack per-shard graphs/vectors (and attribute tables) into one
+    :class:`ShardedCorpus`.
 
     Shards are padded to a common envelope: max level count, per-level max
     row count and neighbor cap (``-1`` filled), max corpus rows (zero-filled
-    vectors, ``-1`` ``pos``).  Padding is invisible to the search — see the
-    module docstring for the parity argument.
+    vectors, ``-1`` ``pos``, zero-filled attribute columns).  Padding is
+    invisible to the search — see the module docstring for the parity
+    argument.  ``tables`` (per-shard ``AttributeTable``s sharing one
+    schema) populates ``columns`` so predicate programs evaluate on
+    device, next to each shard's rows.
     """
     s_count = len(graphs)
     assert s_count == len(xs) == len(bases)
@@ -133,10 +166,53 @@ def stack_corpus(graphs: Sequence[LayeredGraph], xs: Sequence[Array],
         entry_point=jnp.asarray(
             np.array([int(g.entry_point) for g in graphs], np.int32)),
         levels=jnp.asarray(levels))
+
+    columns = None
+    if tables is not None:
+        assert len(tables) == s_count
+        schema = TableSchema.of(tables[0])
+        for s, t in enumerate(tables[1:], start=1):
+            if TableSchema.of(t) != schema:
+                # slot lookups are positional: a shard with different
+                # columns (or a different dict order) would silently pack
+                # into the wrong slots and bend every compiled program
+                raise ValueError(
+                    f"shard {s} table schema {TableSchema.of(t)} != shard "
+                    f"0 schema {schema} — corpus shards must share one "
+                    "column layout")
+        per = [pack_columns(t, schema) for t in tables]
+        ci = per[0].ints.shape[0]
+        cb, w = per[0].bitsets.shape[0], per[0].bitsets.shape[2]
+        ints = np.zeros((s_count, ci, n_max), np.int32)
+        bitsets = np.zeros((s_count, cb, n_max, w), np.uint32)
+        for s, pc in enumerate(per):
+            n_s = pc.ints.shape[1]
+            ints[s, :, :n_s] = np.asarray(pc.ints)
+            bitsets[s, :, :n_s] = np.asarray(pc.bitsets)
+        columns = PackedColumns(ints=jnp.asarray(ints),
+                                bitsets=jnp.asarray(bitsets))
     return ShardedCorpus(
         graph=graph, x=jnp.asarray(x_stack),
         bases=jnp.asarray(np.asarray(list(bases), np.int32)),
-        n_rows=jnp.asarray(np.array([x.shape[0] for x in xs_np], np.int32)))
+        n_rows=jnp.asarray(np.array([x.shape[0] for x in xs_np], np.int32)),
+        columns=columns)
+
+
+def stack_regex_aux(tables: Sequence, n_max: int,
+                    regex_leaves: Tuple[Tuple[str, str], ...]) -> Array:
+    """Per-shard host-evaluated regex-leaf bitmaps, stacked (S, A, n_max).
+
+    Rows pad with False beyond each shard's length; served from each
+    table's ``(column, pattern)`` cache, so a repeated pattern costs one
+    string-column scan per shard total, not one per batch.
+    """
+    s_count = len(tables)
+    a = max(1, len(regex_leaves))
+    out = np.zeros((s_count, a, n_max), bool)
+    for s, t in enumerate(tables):
+        block = np.asarray(regex_aux(t, regex_leaves))
+        out[s, : block.shape[0], : block.shape[1]] = block
+    return jnp.asarray(out)
 
 
 def shard_slice(corpus: ShardedCorpus, s: int) -> Tuple[LayeredGraph, Array]:
@@ -215,16 +291,26 @@ def resolve_corpus_mesh_shape(
 def corpus_search_fn(dp: int, cp: int, statics: dict) -> Callable:
     """Build the shard_map'd corpus-sharded search for one compiled variant.
 
-    Returns ``f(corpus, xq, masks, pre_ids, pre_d, use_pre, alive)`` where
+    Returns ``f(corpus, xq, program, aux, pre_ids, pre_d, use_pre, alive)``
+    where
 
-      * ``corpus``  — :class:`ShardedCorpus`, split along ``corpus``;
+      * ``corpus``  — :class:`ShardedCorpus` (with ``columns``), split
+        along ``corpus``;
       * ``xq``      — (B, d) queries, split along ``data``, replicated
         along ``corpus``;
-      * ``masks``   — (S, B, n_max) per-shard predicate pass-masks;
+      * ``program`` — :class:`PredicateProgram`, per-query instruction
+        rows split along ``data`` like the queries (operands, not masks);
+      * ``aux``     — (S, A, n_max) host-evaluated regex-leaf bitmaps,
+        split along ``corpus``;
       * ``pre_ids``/``pre_d`` — (S, B, k) host-computed exact pre-filter
         results for the (shard, query) pairs routed off the graph;
       * ``use_pre`` — (S, B) bool per-(shard, query) route decisions;
       * ``alive``   — (S,) bool; a dead shard contributes no candidates.
+
+    Each device first evaluates its shard's pass-masks in-program
+    (``evaluate_program`` over the shard-resident columns, padded rows
+    forced False), then searches — the ``(B, n_shard)`` mask exists only
+    device-side, per shard, inside the fused program.
 
     Output: merged global ids/dists (B, k) plus per-shard (S, B)
     dist_comps/hops for observability.  ``B`` must be a multiple of
@@ -242,11 +328,18 @@ def corpus_search_fn(dp: int, cp: int, statics: dict) -> Callable:
     mesh = corpus_mesh(dp, cp)
     k = statics["k"]
     cspec = P("corpus")
+    dspec = P("data")
     sq = P("corpus", "data")
 
-    def local(corpus, xq, masks, pre_ids, pre_d, use_pre, alive):
+    def local(corpus, xq, program, aux, pre_ids, pre_d, use_pre, alive):
         graph = jax.tree_util.tree_map(lambda a: a[0], corpus.graph)
-        ids, d, st = _search_impl(graph, corpus.x[0], xq, masks[0], **statics)
+        # in-program predicate evaluation against shard-resident columns;
+        # envelope-padded rows (>= n_rows) forced False — bit-identical to
+        # the host-embedded mask tail the legacy path produced
+        mask = evaluate_program(program, corpus.columns.ints[0],
+                                corpus.columns.bitsets[0], aux[0],
+                                n_valid=corpus.n_rows[0])
+        ids, d, st = _search_impl(graph, corpus.x[0], xq, mask, **statics)
         # §5.2 routing: low-selectivity (shard, query) pairs take the exact
         # pre-filter answer computed host-side; the graph lanes they rode
         # are fixed-shape padding and get discarded here
@@ -263,12 +356,12 @@ def corpus_search_fn(dp: int, cp: int, statics: dict) -> Callable:
 
     f = shard_map(
         local, mesh,
-        in_specs=(cspec, P("data"), sq, sq, sq, sq, cspec),
+        in_specs=(cspec, dspec, dspec, cspec, sq, sq, sq, cspec),
         out_specs=(sq, sq, sq, sq), check_vma=False)
 
-    def apply(corpus, xq, masks, pre_ids, pre_d, use_pre, alive):
-        ids, d, dcs, hps = f(corpus, xq, masks, pre_ids, pre_d, use_pre,
-                             alive)
+    def apply(corpus, xq, program, aux, pre_ids, pre_d, use_pre, alive):
+        ids, d, dcs, hps = f(corpus, xq, program, aux, pre_ids, pre_d,
+                             use_pre, alive)
         return ids[0], d[0], dcs, hps
 
     return apply
@@ -285,10 +378,10 @@ def _build_corpus_variant(cache: VariantCache, key: tuple, statics: dict,
                           dp: int, cp: int) -> Callable:
     impl = corpus_search_fn(dp, cp, statics)
 
-    def fn(corpus, xq, masks, pre_ids, pre_d, use_pre, alive):
+    def fn(corpus, xq, program, aux, pre_ids, pre_d, use_pre, alive):
         # runs only while tracing -> counts real (re)compilations
         cache.trace_counts[key] = cache.trace_counts.get(key, 0) + 1
-        return impl(corpus, xq, masks, pre_ids, pre_d, use_pre, alive)
+        return impl(corpus, xq, program, aux, pre_ids, pre_d, use_pre, alive)
 
     return jax.jit(fn)
 
@@ -296,7 +389,8 @@ def _build_corpus_variant(cache: VariantCache, key: tuple, statics: dict,
 def corpus_search_batch(
     corpus: ShardedCorpus,
     xq: Array,
-    masks: Array,
+    program: PredicateProgram,
+    aux: Array,
     pre_ids: Array,
     pre_d: Array,
     use_pre: Array,
@@ -310,23 +404,21 @@ def corpus_search_batch(
     metric: str,
     compressed_level0: bool,
     max_expansions: int,
-    use_kernel: bool,
-    interpret: bool,
-    expand_kernel: bool,
+    spec: ExecutionSpec,
     buckets: Tuple[int, ...],
     cache: VariantCache,
-    data_parallel: int,
-    corpus_parallel: int,
 ) -> Tuple[Array, Array, Array, Array]:
     """Ragged-batch corpus-sharded SPMD search through jit buckets.
 
     The corpus-sharded sibling of ``repro.core.batched.search_batch``:
-    queries are planned into mesh-multiple jit buckets
-    (``plan_chunks(multiple_of=data_parallel)``) and dispatched through
-    ``cache`` — keys carry the resolved ``(corpus_parallel,
-    data_parallel)`` mesh shape, so a steady-state server runs one trace
-    per (bucket, config, mesh) triple.  Returns merged global ids (B, k),
-    dists (B, k), and per-shard dist_comps/hops (S, B).
+    queries (and the program's per-query instruction rows) are planned
+    into mesh-multiple jit buckets
+    (``plan_chunks(multiple_of=spec.data_parallel)``) and dispatched
+    through ``cache`` — keys end with ``(program_shape_sig, spec,
+    "corpus")``, the resolved :class:`ExecutionSpec` carrying the mesh
+    shape, so a steady-state server runs one trace per (bucket, config,
+    program-shape, mesh) tuple.  Returns merged global ids (B, k), dists
+    (B, k), and per-shard dist_comps/hops (S, B).
 
     Each chunk's outputs are materialized to host before use: the jitted
     mesh program's outputs carry a GSPMD sharding that marks the merged
@@ -340,14 +432,22 @@ def corpus_search_batch(
     boundary, which is where serving results leave the device anyway;
     the arrays are k-small.
     """
-    dp, cp = data_parallel, corpus_parallel
+    spec = spec.resolve()
+    dp, cp = spec.data_parallel, spec.corpus_parallel
+    if not isinstance(dp, int) or not isinstance(cp, int) or dp < 1:
+        raise ValueError(
+            f"corpus_search_batch needs a resolved mesh spec, got {spec}")
     if corpus.n_shards != cp:
         raise ValueError(
             f"corpus has {corpus.n_shards} shards but corpus_parallel={cp}")
+    if corpus.columns is None:
+        raise ValueError(
+            "corpus was stacked without attribute tables — in-program "
+            "predicate evaluation needs shard-resident columns "
+            "(stack_corpus(..., tables=...))")
     statics = dict(k=k, ef=ef, variant=variant, m=m, m_beta=m_beta,
                    metric=metric, compressed_level0=compressed_level0,
-                   max_expansions=max_expansions, use_kernel=use_kernel,
-                   interpret=interpret, expand_kernel=expand_kernel)
+                   max_expansions=max_expansions, spec=spec)
     total = xq.shape[0]
     if total == 0:  # mirror search_batch's empty-batch contract
         z = jnp.zeros((corpus.n_shards, 0), jnp.int32)
@@ -358,21 +458,22 @@ def corpus_search_batch(
     for take, bucket in plan_chunks(total, buckets, multiple_of=dp):
         sl = slice(start, start + take)
         q = xq[sl]
-        mk, pi, pd = masks[:, sl], pre_ids[:, sl], pre_d[:, sl]
+        prog = program.take(sl)
+        pi, pd = pre_ids[:, sl], pre_d[:, sl]
         up = use_pre[:, sl]
         if take < bucket:
             pad = bucket - take
             q = pad_rows(q, pad)
-            mk, pi = _pad_queries(mk, pad), _pad_queries(pi, pad)
-            pd, up = _pad_queries(pd, pad), _pad_queries(up, pad)
+            prog = jax.tree_util.tree_map(lambda a: pad_rows(a, pad), prog)
+            pi, pd = _pad_queries(pi, pad), _pad_queries(pd, pad)
+            up = _pad_queries(up, pad)
         key = (bucket, k, ef, variant, m, m_beta, metric, compressed_level0,
-               max_expansions, use_kernel, interpret, expand_kernel,
-               True, cp, dp, "corpus")
+               max_expansions, program.shape_sig, spec, "corpus")
         fn = cache.get(key, lambda: _build_corpus_variant(
             cache, key, statics, dp, cp))
         # host fetch on purpose — see the docstring's sharding caveat
         ids, d, dcs, hps = jax.device_get(
-            fn(corpus, q, mk, pi, pd, up, alive))
+            fn(corpus, q, prog, aux, pi, pd, up, alive))
         outs.append((ids[:take], d[:take], dcs[:, :take], hps[:, :take]))
         start += take
     ids = jnp.asarray(np.concatenate([o[0] for o in outs]))

@@ -7,30 +7,40 @@ Operational wrapper around HybridIndex for production serving:
     (``repro.core.batched.search_batch`` via ``HybridIndex.search``), so a
     ragged request stream runs against a handful of compiled shapes and the
     engine never re-traces per request shape;
+  * compiled predicate programs — each batch's predicate trees compile
+    ONCE (``repro.core.plan.compile_predicates``) into a columnar program
+    shared by every shard: routing estimates come from one fused pass per
+    shard sketch, and the SPMD path ships the program (operands, not
+    masks) into the mesh kernel, which evaluates pass-masks in-program
+    against shard-resident attribute columns — the host never
+    materializes a ``(B, n_shard)`` mask per shard;
   * corpus sharding, two execution paths —
 
       - **SPMD (default when the mesh fits):** the per-shard indexes are
         stacked into a :class:`repro.distributed.corpus_parallel.ShardedCorpus`
-        and every batch runs as ONE program on a 2-D ``(data, corpus)``
-        mesh: corpus arrays split one shard per corpus device, queries
-        split along ``data``, per-shard search + local→global id offset +
-        all-gather (distance, global-id) lexsort merge all inside the
-        kernel (``repro.distributed.collectives.gathered_topk_merge``);
+        (graphs + vectors + packed attribute columns) and every batch runs
+        as ONE program on a 2-D ``(data, corpus)`` mesh: corpus arrays
+        split one shard per corpus device, queries + program rows split
+        along ``data``, per-shard in-program predicate evaluation + search
+        + local→global id offset + all-gather (distance, global-id)
+        lexsort merge all inside the kernel
+        (``repro.distributed.collectives.gathered_topk_merge``);
       - **host loop (:meth:`search_batch_host`):** the original Python
         walk over shards with a host-side merge — retained as the parity
         oracle for the SPMD path and as the automatic fallback when the
         host has fewer devices than corpus shards.
 
     Both paths are bit-identical (gated in tests/test_corpus_parallel.py);
-  * query data parallelism — ``EngineConfig.data_parallel`` sizes the
-    ``data`` mesh axis of the SPMD path, or shards each host-loop batch's
-    queries across local devices inside every index shard
-    (``repro.distributed.query_parallel``; ``None`` defers to the
-    AcornConfig knob);
+  * execution policy as ONE value — ``EngineConfig.spec``
+    (:class:`repro.core.plan.ExecutionSpec`) bundles the kernel-routing
+    knobs and the ``(data, corpus)`` mesh shape; the individual
+    ``EngineConfig`` knob fields remain as a compatibility overlay
+    (``None`` defers to the AcornConfig knobs, as before);
   * per-query cost-based routing (ACORN graph vs pre-filter, §5.2) — done
     inside HybridIndex on the host path; the SPMD path computes the same
-    per-(shard, query) decisions host-side and threads them into the
-    kernel as a route mask + exact pre-filter overrides;
+    per-(shard, query) decisions from each shard's sketch (one fused
+    estimate pass per shard) and threads them into the kernel as a route
+    mask + exact pre-filter overrides;
   * straggler mitigation — in the multi-host layout each corpus shard is a
     stateless replica of an on-disk artifact; the engine simulates duplicate
     dispatch: every shard query optionally runs on a mirror, the merge takes
@@ -43,18 +53,22 @@ Operational wrapper around HybridIndex for production serving:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AcornConfig, HybridIndex, Predicate, VariantCache
-from repro.core.predicates import AttributeTable, evaluate_batch
+from repro.core.plan import (ExecutionSpec, PredicateProgram, SearchRequest,
+                             TableSchema, compile_predicates)
+from repro.core.predicates import AttributeTable
 from repro.distributed.collectives import merge_topk  # noqa: F401  (re-export)
 from repro.distributed.corpus_parallel import (ShardedCorpus,
                                                corpus_search_batch,
                                                resolve_corpus_mesh_shape,
-                                               stack_corpus)
+                                               stack_corpus, stack_regex_aux)
+
+Predicates = Union[Sequence[Predicate], PredicateProgram]
 
 
 @dataclasses.dataclass
@@ -64,10 +78,14 @@ class EngineConfig:
     ef: int = 64
     n_shards: int = 1
     duplicate_dispatch: bool = False  # straggler mitigation (mirrored shards)
-    use_kernel: Optional[bool] = None  # None -> AcornConfig knob
+    # execution policy as one value; None = derive from AcornConfig plus
+    # the legacy overlay knobs below
+    spec: Optional[ExecutionSpec] = None
+    # legacy per-knob overlay (None -> AcornConfig knob), kept one release
+    use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None
-    expand_kernel: Optional[bool] = None  # None -> AcornConfig knob
-    data_parallel: Optional[int] = None  # None -> AcornConfig knob; 0 = all
+    expand_kernel: Optional[bool] = None
+    data_parallel: Optional[int] = None  # 0 = all local devices
     # corpus-mesh axis size for the SPMD path. None -> AcornConfig knob;
     # None/0 there = auto (n_shards when the host has the devices). An
     # explicit value must equal n_shards (one shard per corpus device).
@@ -106,65 +124,147 @@ class ServingEngine:
                                         "prefilter_routed": 0,
                                         "graph_routed": 0,
                                         "duplicated_dispatches": 0}
-        # SPMD state: stacked corpus (rebuilt lazily after rebuild_shard)
-        # and the compiled-variant cache for the mesh kernels
+        # SPMD state: stacked corpus (rebuilt lazily after rebuild_shard),
+        # per-regex-leaf-set aux bitmaps, and the compiled-variant cache
+        # for the mesh kernels
         self._corpus: Optional[ShardedCorpus] = None
+        self._aux_cache: Dict[tuple, "jnp.ndarray"] = {}
         self.spmd_cache = VariantCache()
 
     # ------------------------------------------------------------------
-    # SPMD geometry + knob resolution
+    # execution-spec + SPMD geometry resolution
     # ------------------------------------------------------------------
+    def execution_spec(self) -> ExecutionSpec:
+        """The engine's resolved execution policy: ``EngineConfig.spec``
+        when set (the new style), else the AcornConfig spec overlaid with
+        the legacy per-knob EngineConfig fields (``None`` = defer).
+        Combining an explicit ``spec`` with legacy knob fields is an
+        error, matching every other entry point's shim — a silently
+        winning legacy field would invert the migrated config."""
+        c = self.cfg
+        legacy = dict(use_kernel=c.use_kernel, interpret=c.interpret,
+                      expand_kernel=c.expand_kernel,
+                      data_parallel=c.data_parallel,
+                      corpus_parallel=c.corpus_parallel)
+        if c.spec is not None:
+            conflicts = sorted(k for k, v in legacy.items() if v is not None)
+            if conflicts:
+                raise TypeError(
+                    f"EngineConfig: pass either spec=ExecutionSpec(...) or "
+                    f"the legacy knob fields {conflicts}, not both")
+            return c.spec
+        return self.acorn.execution_spec().overlay(**legacy)
+
     def spmd_mesh_shape(self) -> Optional[Tuple[int, int]]:
         """The ``(data, corpus)`` mesh the SPMD path would run on, or
         ``None`` when this engine serves through the host loop."""
         if self.cfg.host_fallback:
             return None
-        cp = self.cfg.corpus_parallel
-        if cp is None:
-            cp = self.acorn.corpus_parallel
-        dp = self.cfg.data_parallel
-        if dp is None:
-            dp = self.acorn.data_parallel
-        return resolve_corpus_mesh_shape(self.cfg.n_shards,
-                                         data_parallel=dp,
-                                         corpus_parallel=cp)
-
-    def _resolved_kernel_knobs(self) -> Tuple[bool, bool, bool]:
-        a, c = self.acorn, self.cfg
-        use_kernel = a.use_kernel if c.use_kernel is None else c.use_kernel
-        interpret = a.interpret if c.interpret is None else c.interpret
-        expand = a.expand_kernel if c.expand_kernel is None else c.expand_kernel
-        return use_kernel, interpret, use_kernel if expand is None else expand
+        spec = self.execution_spec()
+        return resolve_corpus_mesh_shape(
+            self.cfg.n_shards, data_parallel=spec.data_parallel,
+            corpus_parallel=spec.corpus_parallel)
 
     def _stacked_corpus(self) -> ShardedCorpus:
         if self._corpus is None:
             self._corpus = stack_corpus(
                 [s.index.graph for s in self.shards],
                 [s.index.x for s in self.shards],
-                [s.base for s in self.shards])
+                [s.base for s in self.shards],
+                tables=[s.index.table for s in self.shards])
         return self._corpus
 
-    # ------------------------------------------------------------------
-    def search_batch(self, xq, predicates: Sequence[Predicate]):
-        """One batched step across all shards + merge (SPMD when the mesh
-        fits, host loop otherwise — bit-identical either way)."""
-        shape = self.spmd_mesh_shape()
-        if shape is None:
-            return self.search_batch_host(xq, predicates)
-        return self._search_batch_spmd(xq, predicates, *shape)
+    def compile(self, predicates: Sequence[Predicate]) -> PredicateProgram:
+        """Compile predicate trees once against the corpus schema; the
+        program is valid for every shard (``take`` preserves the schema)
+        and for both execution paths."""
+        return compile_predicates(predicates, self._table)
+
+    @staticmethod
+    def _unpack(request, predicates):
+        if isinstance(request, SearchRequest):
+            if predicates is not None:
+                raise TypeError(
+                    "pass predicates inside the SearchRequest, not alongside")
+            return (request.xq, request.predicates, request.k, request.ef,
+                    request.route)
+        return request, predicates, None, None, None
 
     # ------------------------------------------------------------------
-    def _search_batch_spmd(self, xq, predicates: Sequence[Predicate],
-                           dp: int, cp: int):
-        """The mesh-native path: routing/fault state is computed host-side
-        and threaded into one SPMD kernel per jit bucket."""
+    def search_batch(self, request: Union[SearchRequest, "jnp.ndarray"],
+                     predicates: Optional[Predicates] = None):
+        """One batched step across all shards + merge (SPMD when the mesh
+        fits, host loop otherwise — bit-identical either way).
+
+        Accepts a :class:`SearchRequest` (whose ``k``/``ef``/``route``
+        override the engine defaults for this call) or the legacy
+        ``(xq, predicates)`` pair; ``predicates`` may be trees or a
+        pre-compiled program.
+        """
+        xq, preds, k, ef, route = self._unpack(request, predicates)
+        shape = self.spmd_mesh_shape()
+        if shape is None:
+            return self._search_batch_host(xq, preds, k=k, ef=ef,
+                                           route=route)
+        return self._search_batch_spmd(xq, preds, *shape, k=k, ef=ef,
+                                       route=route)
+
+    # ------------------------------------------------------------------
+    def _program(self, preds: Predicates, b: int) -> PredicateProgram:
+        if preds is None:
+            raise TypeError(
+                "ServingEngine requires predicates (trees or a compiled "
+                "program); pass TruePredicate() per query for match-all")
+        if isinstance(preds, PredicateProgram):
+            # the SPMD kernel reads corpus columns by compile-time slot
+            # number (no name lookup on device) — a program compiled
+            # against a different column layout would silently read the
+            # wrong slots, so reject it here at the public surface
+            schema = TableSchema.of(self._table)
+            if preds.schema is not None and preds.schema != schema:
+                raise ValueError(
+                    f"program compiled against schema {preds.schema} but "
+                    f"this engine's corpus has {schema} — compile with "
+                    "engine.compile(...) (shards share that one layout)")
+            prog = preds
+        else:
+            prog = self.compile(preds)
+        if prog.n_queries != b:
+            raise ValueError(f"{b} queries but {prog.n_queries} predicates")
+        return prog
+
+    def _regex_aux(self, program: PredicateProgram,
+                   n_max: int) -> "jnp.ndarray":
+        """Stacked per-shard regex-leaf bitmaps, cached per leaf set —
+        steady-state streams reuse one device-resident block instead of
+        re-stacking and re-transferring (S, A, n_max) every batch."""
+        aux = self._aux_cache.get(program.regex_leaves)
+        if aux is None:
+            aux = stack_regex_aux([s.index.table for s in self.shards],
+                                  n_max, program.regex_leaves)
+            if len(self._aux_cache) >= 64:  # unbounded predicate streams
+                self._aux_cache.pop(next(iter(self._aux_cache)))
+            self._aux_cache[program.regex_leaves] = aux
+        return aux
+
+    def _search_batch_spmd(self, xq, preds: Predicates, dp: int, cp: int,
+                           k: Optional[int] = None, ef: Optional[int] = None,
+                           route: Optional[str] = None):
+        """The mesh-native path: the compiled program + routing/fault
+        state thread into one SPMD kernel per jit bucket; predicate
+        masks are evaluated in-program on each corpus device."""
         cfg, acorn = self.cfg, self.acorn
-        b, k = xq.shape[0], cfg.k
+        b = xq.shape[0]
+        k = cfg.k if k is None else k
+        ef = (ef or cfg.ef) or acorn.ef_search
         n_shards = cfg.n_shards
         corpus = self._stacked_corpus()
         n_max = corpus.x.shape[1]
 
-        masks = np.zeros((n_shards, b, n_max), bool)
+        program = self._program(preds, b)
+        # host-only (regex) leaves: per-shard cached bitmaps, not masks
+        aux = self._regex_aux(program, n_max)
+
         use_pre = np.zeros((n_shards, b), bool)
         pre_ids = np.full((n_shards, b, k), -1, np.int32)
         pre_d = np.full((n_shards, b, k), np.inf, np.float32)
@@ -179,18 +279,25 @@ class ServingEngine:
                 else:
                     continue  # shard contributes nothing this batch
             alive[s] = True
-            m_s = np.asarray(evaluate_batch(predicates, shard.index.table))
-            masks[s, :, : m_s.shape[1]] = m_s
             # §5.2 cost-based routing, per (shard, query): each shard's own
-            # selectivity sketch decides, exactly like HybridIndex.search
-            s_est = np.array([shard.index.sketch.estimate(p)
-                              for p in predicates])
-            pre = s_est < acorn.s_min
+            # selectivity sketch decides, exactly like HybridIndex.search —
+            # one fused estimate pass per shard instead of B round trips;
+            # a request route overrides the router, as on the host path
+            if route == "graph":
+                pre = np.zeros(b, bool)
+            elif route == "prefilter":
+                pre = np.ones(b, bool)
+            else:
+                s_est = shard.index.sketch.estimate_batch(program)
+                pre = s_est < acorn.s_min
             use_pre[s] = pre
             if pre.any():
                 qidx = np.nonzero(pre)[0]
-                ids_p, d_p = shard.index.prefilter(
-                    xq[qidx], jnp.asarray(m_s[qidx]), k)
+                # the exact route needs real masks, but only for its own
+                # (shard, query) pairs — evaluated on device from the
+                # program rows, never a full (B, n_shard) host block
+                sub_masks = program.take(qidx).evaluate(shard.index.table)
+                ids_p, d_p = shard.index.prefilter(xq[qidx], sub_masks, k)
                 pre_ids[s, qidx] = ids_p
                 pre_d[s, qidx] = d_p
             self.stats["prefilter_routed"] += int(pre.sum())
@@ -203,26 +310,41 @@ class ServingEngine:
             return (jnp.full((b, k), -1, jnp.int32),
                     jnp.full((b, k), jnp.inf, jnp.float32))
 
-        use_kernel, interpret, expand_kernel = self._resolved_kernel_knobs()
         variant = acorn.variant
+        spec = self.execution_spec().resolve(data_parallel=dp,
+                                             corpus_parallel=cp)
         ids, d, _, _ = corpus_search_batch(
-            corpus, xq, jnp.asarray(masks), jnp.asarray(pre_ids),
+            corpus, xq, program, aux, jnp.asarray(pre_ids),
             jnp.asarray(pre_d), jnp.asarray(use_pre), jnp.asarray(alive),
-            k=k, ef=cfg.ef or acorn.ef_search, variant=variant, m=acorn.M,
+            k=k, ef=ef, variant=variant, m=acorn.M,
             m_beta=acorn.resolved_m_beta(), metric=acorn.metric,
             compressed_level0=acorn.compress and variant == "acorn-gamma",
-            max_expansions=acorn.max_expansions, use_kernel=use_kernel,
-            interpret=interpret, expand_kernel=expand_kernel,
-            buckets=acorn.buckets, cache=self.spmd_cache,
-            data_parallel=dp, corpus_parallel=cp)
+            max_expansions=acorn.max_expansions, spec=spec,
+            buckets=acorn.buckets, cache=self.spmd_cache)
         return ids, d
 
     # ------------------------------------------------------------------
-    def search_batch_host(self, xq, predicates: Sequence[Predicate]):
+    def search_batch_host(self, request: Union[SearchRequest, "jnp.ndarray"],
+                          predicates: Optional[Predicates] = None):
         """The host-side shard walk + merge — the parity oracle for the
         SPMD path and the fallback when the mesh doesn't fit."""
+        xq, preds, k, ef, route = self._unpack(request, predicates)
+        return self._search_batch_host(xq, preds, k=k, ef=ef, route=route)
+
+    def _search_batch_host(self, xq, preds: Predicates,
+                           k: Optional[int] = None,
+                           ef: Optional[int] = None,
+                           route: Optional[str] = None):
         cfg = self.cfg
         b = xq.shape[0]
+        k = cfg.k if k is None else k
+        ef = ef if ef is not None else cfg.ef
+        # compile once, share across shards (one schema corpus-wide); the
+        # per-shard spec pins corpus_parallel: each HybridIndex is exactly
+        # one corpus shard, whatever mesh geometry the engine runs
+        program = self._program(preds, b)
+        shard_spec = dataclasses.replace(self.execution_spec(),
+                                         corpus_parallel=None)
         all_ids, all_d = [], []
         for shard in self.shards:
             mirrors = 2 if (cfg.duplicate_dispatch and cfg.n_shards > 1) else 1
@@ -236,10 +358,9 @@ class ServingEngine:
                         self.stats["duplicated_dispatches"] += 1
                     continue  # primary "failed"; mirror answers
                 ids, d, info = shard.index.search(
-                    xq, predicates, k=cfg.k, ef=cfg.ef,
-                    use_kernel=cfg.use_kernel, interpret=cfg.interpret,
-                    expand_kernel=cfg.expand_kernel,
-                    data_parallel=cfg.data_parallel)
+                    SearchRequest(xq=xq, predicates=program, k=k, ef=ef,
+                                  route=route),
+                    spec=shard_spec)
                 result = (ids, d, info)
                 break
             if result is None:  # all mirrors down -> shard contributes none
@@ -257,27 +378,36 @@ class ServingEngine:
         if not all_ids:
             # every shard (and mirror) down: degrade to an empty result set
             # instead of crashing the serving path — availability first
-            return (jnp.full((b, cfg.k), -1, jnp.int32),
-                    jnp.full((b, cfg.k), jnp.inf, jnp.float32))
+            return (jnp.full((b, k), -1, jnp.int32),
+                    jnp.full((b, k), jnp.inf, jnp.float32))
         ids = jnp.concatenate(all_ids, axis=1)
         d = jnp.concatenate(all_d, axis=1)
-        return merge_topk(ids, d, cfg.k)
+        return merge_topk(ids, d, k)
 
     # ------------------------------------------------------------------
-    def serve(self, xq, predicates: Sequence[Predicate]):
+    def serve(self, request: Union[SearchRequest, "jnp.ndarray"],
+              predicates: Optional[Predicates] = None):
         """Batch an arbitrary request stream into cfg.batch_size chunks.
 
-        Chunks are NOT padded here: each path pads to its jit buckets
+        Accepts a :class:`SearchRequest` or the legacy ``(xq,
+        predicates)`` pair; predicate trees compile once for the whole
+        stream and the compiled program is row-sliced per chunk.  Chunks
+        are NOT padded here: each path pads to its jit buckets
         (``HybridIndex.search`` per shard on the host loop,
         ``corpus_search_batch`` on the mesh), so ragged tails reuse the
         per-bucket compiled variants instead of minting a new shape."""
+        xq, preds, k, ef, route = self._unpack(request, predicates)
         b = self.cfg.batch_size
-        outs_i, outs_d = [], []
         n = xq.shape[0]
+        program = self._program(preds, n)
+        outs_i, outs_d = [], []
         for start in range(0, n, b):
             stop = min(start + b, n)
-            ids, d = self.search_batch(xq[start:stop],
-                                       list(predicates[start:stop]))
+            req = SearchRequest(xq=xq[start:stop],
+                                predicates=program.take(slice(start, stop)),
+                                k=self.cfg.k if k is None else k, ef=ef,
+                                route=route)
+            ids, d = self.search_batch(req)
             outs_i.append(ids)
             outs_d.append(d)
         return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
@@ -311,4 +441,6 @@ class ServingEngine:
                                         self._table.take(idx), self.acorn,
                                         seed=seed + s)
         shard.healthy = True
-        self._corpus = None  # restack the SPMD corpus on next dispatch
+        # restack the SPMD corpus + aux bitmaps on next dispatch
+        self._corpus = None
+        self._aux_cache.clear()

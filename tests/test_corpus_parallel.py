@@ -110,7 +110,40 @@ def test_corpus_search_batch_empty_batch():
     """Zero queries return (0, k) / (S, 0) shapes instead of crashing on
     np.concatenate([]) — the same empty-input crash class PR 2 fixed in
     the serving engine."""
-    from repro.core import VariantCache
+    from repro.core import ExecutionSpec, VariantCache, compile_predicates
+    from repro.core.predicates import Equals
+    from repro.distributed import corpus_search_batch, stack_regex_aux
+    ds = make_lcps_dataset(n=300, d=8, card=4, seed=0)
+    acorn = AcornConfig(M=8, gamma=4, m_beta=16, ef_search=16)
+    eng = ServingEngine(ds.x, ds.table, acorn,
+                        EngineConfig(batch_size=8, k=5, n_shards=2))
+    tables = [s.index.table for s in eng.shards]
+    corpus = stack_corpus([s.index.graph for s in eng.shards],
+                          [s.index.x for s in eng.shards],
+                          [s.base for s in eng.shards], tables=tables)
+    n_max = int(corpus.x.shape[1])
+    # an empty-row program: compile one predicate, slice zero rows
+    prog = compile_predicates([Equals("label", 0)], ds.table).take(
+        np.arange(0))
+    aux = stack_regex_aux(tables, n_max, prog.regex_leaves)
+    z = jnp.zeros
+    ids, d, dcs, hps = corpus_search_batch(
+        corpus, z((0, 8)), prog, aux, z((2, 0, 5), jnp.int32),
+        z((2, 0, 5)), z((2, 0), bool), jnp.ones((2,), bool),
+        k=5, ef=16, variant="acorn-gamma", m=8, m_beta=16, metric="l2",
+        compressed_level0=True, max_expansions=64,
+        spec=ExecutionSpec(data_parallel=1, corpus_parallel=2),
+        buckets=(8,), cache=VariantCache())
+    assert ids.shape == (0, 5) and d.shape == (0, 5)
+    assert dcs.shape == (2, 0) and hps.shape == (2, 0)
+
+
+def test_corpus_search_batch_requires_columns():
+    """A corpus stacked without attribute tables cannot evaluate predicate
+    programs in-program — it must fail loudly, not silently return
+    unfiltered results."""
+    from repro.core import ExecutionSpec, VariantCache, compile_predicates
+    from repro.core.predicates import Equals
     from repro.distributed import corpus_search_batch
     ds = make_lcps_dataset(n=300, d=8, card=4, seed=0)
     acorn = AcornConfig(M=8, gamma=4, m_beta=16, ef_search=16)
@@ -118,37 +151,41 @@ def test_corpus_search_batch_empty_batch():
                         EngineConfig(batch_size=8, k=5, n_shards=2))
     corpus = stack_corpus([s.index.graph for s in eng.shards],
                           [s.index.x for s in eng.shards],
-                          [s.base for s in eng.shards])
+                          [s.base for s in eng.shards])  # no tables
+    assert corpus.columns is None
+    prog = compile_predicates([Equals("label", 0)], ds.table)
     n_max = int(corpus.x.shape[1])
-    z = jnp.zeros
-    ids, d, dcs, hps = corpus_search_batch(
-        corpus, z((0, 8)), z((2, 0, n_max), bool), z((2, 0, 5), jnp.int32),
-        z((2, 0, 5)), z((2, 0), bool), jnp.ones((2,), bool),
-        k=5, ef=16, variant="acorn-gamma", m=8, m_beta=16, metric="l2",
-        compressed_level0=True, max_expansions=64, use_kernel=False,
-        interpret=True, expand_kernel=False, buckets=(8,),
-        cache=VariantCache(), data_parallel=1, corpus_parallel=2)
-    assert ids.shape == (0, 5) and d.shape == (0, 5)
-    assert dcs.shape == (2, 0) and hps.shape == (2, 0)
+    with pytest.raises(ValueError, match="without attribute tables"):
+        corpus_search_batch(
+            corpus, jnp.zeros((1, 8)), prog,
+            jnp.zeros((2, 1, n_max), bool), jnp.zeros((2, 1, 5), jnp.int32),
+            jnp.zeros((2, 1, 5)), jnp.zeros((2, 1), bool),
+            jnp.ones((2,), bool), k=5, ef=16, variant="acorn-gamma", m=8,
+            m_beta=16, metric="l2", compressed_level0=True,
+            max_expansions=64,
+            spec=ExecutionSpec(data_parallel=1, corpus_parallel=2),
+            buckets=(8,), cache=VariantCache())
 
 
 def test_search_batch_rejects_multi_shard_corpus_parallel():
     """search_batch searches one corpus shard; the knob is key-threading
     only and a multi-shard request must fail loudly, not silently search
     an unsharded graph."""
-    from repro.core import VariantCache, build_acorn_gamma, search_batch
+    from repro.core import (ExecutionSpec, VariantCache, build_acorn_gamma,
+                            search_batch)
     ds = make_lcps_dataset(n=300, d=8, card=4, seed=0)
     wl = make_workload(ds, kind="equals", n_queries=4, k=3, seed=1, card=4)
     g = build_acorn_gamma(ds.x, jax.random.PRNGKey(0), M=8, gamma=4,
                           m_beta=16)
     kw = dict(k=3, ef=8, variant="acorn-gamma", m=8, m_beta=16, buckets=(4,))
     with pytest.raises(ValueError):
-        search_batch(g, ds.x, wl.xq, wl.masks(ds), corpus_parallel=2, **kw)
+        search_batch(g, ds.x, wl.xq, wl.masks(ds),
+                     spec=ExecutionSpec(corpus_parallel=2), **kw)
     cache = VariantCache()
     search_batch(g, ds.x, wl.xq, wl.masks(ds), cache=cache,
-                 corpus_parallel=1, **kw)
-    # keys carry (corpus_parallel, data_parallel) as the last two fields
-    assert all(key[-2] == 1 for key in cache.fns)
+                 spec=ExecutionSpec(corpus_parallel=1), **kw)
+    # the resolved ExecutionSpec terminates the key; single-shard pins cp=1
+    assert all(key[-1].corpus_parallel == 1 for key in cache.fns)
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +206,17 @@ ds = make_lcps_dataset(n=1200, d=12, card=6, seed=0)
 wl = make_workload(ds, kind="equals", n_queries=37, k=10, seed=1, card=6)
 GT = wl.gt(ds)
 BS = 16
+
+# ---- no host-side mask materialization on the serving path ----
+# Predicates now travel as compiled programs evaluated in-program against
+# shard-resident columns (SPMD) or through the fused plan evaluator (host
+# oracle).  Forbid the legacy per-predicate host evaluators outright: any
+# serving-path call would crash every parity block below.
+import repro.core.predicates as _pred_mod
+def _forbidden(*a, **k):
+    raise RuntimeError("legacy host-side predicate evaluation on serving path")
+_pred_mod.evaluate_batch = _forbidden
+_pred_mod.evaluate = _forbidden
 
 def serve_host(eng, xq, preds):
     outs_i, outs_d = [], []
@@ -210,8 +258,11 @@ for dp, cp in [(2, 4), (4, 2), (1, 8), (8, 1)]:
     assert eng.spmd_traces() == {16: 1}, eng.spmd_traces()
     eng.serve(wl.xq, wl.predicates)
     assert eng.spmd_traces() == {16: 1}, eng.spmd_traces()
-    # keys carry the resolved mesh shape
-    assert all(k[-3:] == (cp, dp, "corpus") for k in eng.spmd_cache.fns)
+    # keys end (..., program_shape_sig, resolved ExecutionSpec, "corpus")
+    for k in eng.spmd_cache.fns:
+        assert k[-1] == "corpus"
+        assert k[-2].corpus_parallel == cp and k[-2].data_parallel == dp
+        assert isinstance(k[-3], tuple)  # bucketed program shape signature
 
 # ---- auto geometry: corpus_parallel=None picks (ndev//n_shards, n_shards)
 acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32, buckets=(16, 64),

@@ -69,8 +69,10 @@ def test_search_batch_clamps_oversized_data_parallel():
                                **kw)
     np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
     np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
-    # cache keys carry the *resolved* device count
-    assert all(key[-1] == jax.local_device_count() for key in cache.fns)
+    # cache keys end with the resolved ExecutionSpec carrying the
+    # *resolved* device count
+    assert all(key[-1].data_parallel == jax.local_device_count()
+               for key in cache.fns)
 
 
 # ---------------------------------------------------------------------------
@@ -106,9 +108,9 @@ np.testing.assert_array_equal(np.asarray(st1.dist_comps),
                               np.asarray(st8.dist_comps))
 np.testing.assert_array_equal(np.asarray(st1.hops), np.asarray(st8.hops))
 
-# one trace per bucket, dp recorded in the key, steady state mints nothing
+# one trace per bucket, dp recorded in the key spec, steady state mints nothing
 assert c8.bucket_traces() == {16: 1}, c8.bucket_traces()
-assert all(key[-1] == 8 for key in c8.fns)
+assert all(key[-1].data_parallel == 8 for key in c8.fns)
 search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64), cache=c8,
              data_parallel=8, **kw)
 assert c8.num_traces == 1
