@@ -27,8 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (VariantCache, build_acorn_gamma, recall_at_k,
-                        search_batch)
+from repro.core import (ExecutionSpec, VariantCache, build_acorn_gamma,
+                        recall_at_k, search_batch)
 from repro.data import make_lcps_dataset, make_workload
 
 from .common import timed_qps
@@ -51,8 +51,9 @@ def _make_runner(graph, x, xq, masks, bs: int, nq: int, use_kernel: bool):
             ids, _, _ = search_batch(
                 graph, x, xq[s:s + bs], masks[s:s + bs], k=K, ef=EF,
                 variant="acorn-gamma", m=M, m_beta=MBETA,
-                compressed_level0=False, use_kernel=use_kernel,
-                interpret=True, buckets=(bs,), cache=cache)
+                compressed_level0=False,
+                spec=ExecutionSpec(use_kernel=use_kernel, interpret=True),
+                buckets=(bs,), cache=cache)
             outs.append(ids)
         return jnp.concatenate(outs)
 

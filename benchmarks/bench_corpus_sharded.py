@@ -53,7 +53,7 @@ def _child(args) -> None:
     import jax
     import numpy as np
 
-    from repro.core import AcornConfig, recall_at_k
+    from repro.core import AcornConfig, ExecutionSpec, recall_at_k
     from repro.data import make_lcps_dataset, make_workload
     from repro.serve import EngineConfig, ServingEngine
 
@@ -68,14 +68,14 @@ def _child(args) -> None:
     results = []
     for dp, cp in args.shapes:
         assert jax.local_device_count() >= dp * cp
-        acorn = AcornConfig(M=M, gamma=GAMMA, m_beta=MBETA, ef_search=EF,
-                            data_parallel=dp)
+        acorn = AcornConfig(M=M, gamma=GAMMA, m_beta=MBETA, ef_search=EF)
         for bs in args.batches:
             nq = 2 * bs
             eng = ServingEngine(
                 ds.x, ds.table, acorn,
                 EngineConfig(batch_size=bs, k=K, ef=EF, n_shards=cp,
-                             corpus_parallel=cp))
+                             spec=ExecutionSpec(data_parallel=dp,
+                                                corpus_parallel=cp)))
             assert eng.spmd_mesh_shape() == (dp, cp)
             xq, preds = wl.xq[:nq], list(wl.predicates[:nq])
 

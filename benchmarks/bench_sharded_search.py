@@ -45,8 +45,8 @@ def _child(args) -> None:
     import jax
     import numpy as np
 
-    from repro.core import (VariantCache, build_acorn_gamma, recall_at_k,
-                            search_batch)
+    from repro.core import (ExecutionSpec, VariantCache, build_acorn_gamma,
+                            recall_at_k, search_batch)
     from repro.data import make_lcps_dataset, make_workload
 
     from benchmarks.common import timed_qps
@@ -69,8 +69,10 @@ def _child(args) -> None:
         nq = 2 * bs
         cache = VariantCache()
         kw = dict(k=K, ef=EF, variant="acorn-gamma", m=M, m_beta=MBETA,
-                  compressed_level0=False, use_kernel=False, interpret=True,
-                  buckets=(bs,), cache=cache, data_parallel=dp)
+                  compressed_level0=False,
+                  spec=ExecutionSpec(use_kernel=False, interpret=True,
+                                     data_parallel=dp),
+                  buckets=(bs,), cache=cache)
 
         def run_once():
             outs = []

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ann_search, hybrid_search, masked_topk,
-                        prefilter_search, postfilter_search, recall_at_k)
+from repro.core import (ExecutionSpec, ann_search, hybrid_search,
+                        masked_topk, prefilter_search, postfilter_search,
+                        recall_at_k)
 
 BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                          "bench")
@@ -69,8 +70,8 @@ def run_acorn(graph, x, wl, ds, ef: int, variant: str, m: int, m_beta: int,
     masks, gt = wl.masks(ds), wl.gt(ds)
     kw = dict(k=K, ef=ef, variant=variant, m=m, m_beta=m_beta,
               compressed_level0=compressed and variant == "acorn-gamma",
-              max_expansions=4 * ef, use_kernel=use_kernel,
-              interpret=interpret)
+              max_expansions=4 * ef,
+              spec=ExecutionSpec(use_kernel=use_kernel, interpret=interpret))
     ids, _, st = hybrid_search(graph, x, wl.xq, masks, **kw)
     qps = timed_qps(lambda: hybrid_search(graph, x, wl.xq, masks, **kw)[0],
                     wl.xq.shape[0])

@@ -27,6 +27,8 @@ MODULES = [
     ("bench_batched_search", "Batched search: jit buckets x kernel QPS"),
     ("bench_sharded_search", "Sharded search: device-count x batch QPS"),
     ("bench_corpus_sharded", "Corpus-sharded SPMD: mesh-shape x batch QPS"),
+    ("bench_serving_runtime",
+     "Serving runtime: Poisson open loop vs closed loop"),
     ("bench_neighbor_expand", "Neighbor expansion: strategy x cap x impl"),
     ("bench_predicate_compile",
      "Predicate programs: host mask path vs compiled on-device"),

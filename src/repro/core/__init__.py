@@ -4,9 +4,9 @@ from .predicates import (AttributeTable, Predicate, Equals, OneOf, Between,
                          SelectivitySketch, evaluate, evaluate_batch,
                          selectivity, pack_multihot)
 from .plan import (ExecutionSpec, PredicateProgram, SearchRequest,
-                   TableSchema, PackedColumns, compile_predicates,
-                   evaluate_program, evaluate_predicates, pack_columns,
-                   regex_aux)
+                   SearchResult, TableSchema, PackedColumns, admission_key,
+                   compile_predicates, evaluate_program, evaluate_predicates,
+                   pack_columns, regex_aux, sentinel_result)
 from .graph import LayeredGraph, assign_levels, neighbor_rows, memory_bytes
 from .bruteforce import masked_topk, ground_truth, recall_at_k, pairwise_sq_l2
 from .build import build_acorn_gamma, build_acorn_1, build_hnsw, build_bulk
@@ -24,9 +24,10 @@ __all__ = [
     "ContainsAny", "RegexMatch", "And", "Or", "Not", "TruePredicate",
     "SelectivitySketch", "evaluate", "evaluate_batch", "selectivity",
     "pack_multihot",
-    "ExecutionSpec", "PredicateProgram", "SearchRequest", "TableSchema",
-    "PackedColumns", "compile_predicates", "evaluate_program",
-    "evaluate_predicates", "pack_columns", "regex_aux",
+    "ExecutionSpec", "PredicateProgram", "SearchRequest", "SearchResult",
+    "TableSchema", "PackedColumns", "admission_key", "compile_predicates",
+    "evaluate_program", "evaluate_predicates", "pack_columns", "regex_aux",
+    "sentinel_result",
     "LayeredGraph", "assign_levels", "neighbor_rows",
     "memory_bytes", "masked_topk", "ground_truth", "recall_at_k",
     "pairwise_sq_l2", "build_acorn_gamma", "build_acorn_1", "build_hnsw",

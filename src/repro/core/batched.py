@@ -10,8 +10,14 @@ request sizes arrive.
 Execution knobs (kernel routing + mesh shape) travel as ONE frozen
 :class:`repro.core.plan.ExecutionSpec` value — the resolved spec is the
 final component of every cache key, replacing the five loose knob kwargs
-that used to thread positionally through the pipeline.  The old kwargs
-remain accepted for one release behind a ``DeprecationWarning`` shim.
+that used to thread positionally through the pipeline.  The legacy kwargs
+had one release of ``DeprecationWarning`` shim support and are now
+retired: passing them raises ``TypeError`` naming the spec field.
+
+The serving runtime (``repro.serve.runtime``) reuses the bucket planner
+for admission-queue coalescing: :func:`coalesce_take` decides how many
+queued queries drain into one dispatch and :func:`bucket_for` names the
+jit bucket that dispatch pads into (the latency-model key).
 
 Chunk planning minimizes padded compute with a small per-dispatch penalty
 (``DISPATCH_COST_QUERIES``): 37 queries against buckets {16, 64} run as
@@ -92,6 +98,32 @@ def plan_chunks(total: int, buckets: Tuple[int, ...],
     return chunks
 
 
+def bucket_for(n: int, buckets: Tuple[int, ...],
+               multiple_of: int = 1) -> int:
+    """The jit bucket a dispatch of ``n`` queries pads into — the first
+    chunk :func:`plan_chunks` would plan.  The serving runtime keys its
+    per-bucket latency model and metrics on this."""
+    if n < 1:
+        raise ValueError(n)
+    return plan_chunks(n, buckets, multiple_of=multiple_of)[0][1]
+
+
+def coalesce_take(queued: int, buckets: Tuple[int, ...],
+                  multiple_of: int = 1) -> int:
+    """How many queued queries to drain into one coalesced dispatch.
+
+    Continuous batching drains up to the LARGEST jit bucket per dispatch
+    (one launch, maximum amortization); the remainder stays queued for the
+    next round, where newly-arrived requests can still join it.  Bucket
+    shapes go through :func:`mesh_buckets` so a data-parallel runtime
+    coalesces in mesh-multiple shapes.
+    """
+    if queued < 0:
+        raise ValueError(queued)
+    bs = mesh_buckets(buckets, multiple_of)
+    return min(queued, bs[-1])
+
+
 @dataclass
 class VariantCache:
     """Compiled-variant cache: one jitted callable per (bucket, config) key.
@@ -127,10 +159,6 @@ class VariantCache:
 
 
 _DEFAULT_CACHE = VariantCache()
-
-# distinguishes "legacy knob not passed" from an explicit legacy None
-# (which historically meant "all local devices" for data_parallel)
-_UNSET = object()
 
 
 def _build_variant(cache: VariantCache, key: tuple, statics: dict,
@@ -179,7 +207,7 @@ def search_batch(
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     expand_kernel: Optional[bool] = None,
-    data_parallel=_UNSET,
+    data_parallel: Optional[int] = None,
     corpus_parallel: Optional[int] = None,
 ) -> Tuple[Array, Array, SearchStats]:
     """Ragged-batch hybrid search through jit buckets.
@@ -192,8 +220,8 @@ def search_batch(
     one the traversal degrades to the plain-HNSW neighbor scan.
 
     Execution policy rides in ``spec`` (:class:`repro.core.plan.
-    ExecutionSpec`); the five legacy knob kwargs still work behind a
-    ``DeprecationWarning`` shim for one release.  ``spec.data_parallel``
+    ExecutionSpec`); the five retired legacy knob kwargs raise
+    ``TypeError`` naming the spec field.  ``spec.data_parallel``
     > 1 shards each bucket's queries across that many local devices
     (clamped to the host's device count) via the shard_map dispatch in
     ``repro.distributed.query_parallel``; bucket sizes are rounded up to
@@ -213,14 +241,9 @@ def search_batch(
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     cache = _DEFAULT_CACHE if cache is None else cache
-    if data_parallel is _UNSET:
-        legacy_dp = None  # knob not passed
-    else:
-        # historical semantics of the legacy knob: None / 0 = all devices
-        legacy_dp = 0 if data_parallel is None else data_parallel
     spec = resolve_execution_spec(
         spec, "search_batch", use_kernel=use_kernel, interpret=interpret,
-        expand_kernel=expand_kernel, data_parallel=legacy_dp,
+        expand_kernel=expand_kernel, data_parallel=data_parallel,
         corpus_parallel=corpus_parallel)
     if spec.corpus_parallel not in (None, 0, 1):
         raise ValueError(

@@ -12,8 +12,11 @@ pre-compiled :class:`PredicateProgram` + k/ef/route) plus an optional
 program: one on-device pass yields every query's pass-mask, and one more
 pass over the selectivity-sketch sample yields every routing estimate —
 replacing the legacy per-predicate host↔device round trips.  The old
-``search(xq, predicates, ..., use_kernel=...)`` call style keeps working
-(knob kwargs behind a ``DeprecationWarning`` shim for one release).
+``search(xq, predicates, ..., use_kernel=...)`` knob-kwarg call style is
+retired: passing a legacy knob raises ``TypeError`` naming the
+``ExecutionSpec`` field.  Results come back as one typed
+:class:`repro.core.plan.SearchResult` (tuple unpacking still works via
+``__iter__`` for this release).
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ from .batched import (DEFAULT_BUCKETS, VariantCache, pad_rows, plan_chunks,
 from .build import build_acorn_1, build_acorn_gamma
 from .graph import INVALID, LayeredGraph, memory_bytes
 from .plan import (ExecutionSpec, PredicateProgram, SearchRequest,
-                   compile_predicates, resolve_execution_spec)
+                   SearchResult, compile_predicates, resolve_execution_spec)
 from .predicates import (AttributeTable, Predicate, SelectivitySketch)
 
 Array = jax.Array
@@ -168,7 +171,7 @@ class HybridIndex:
         expand_kernel: Optional[bool] = None,
         data_parallel: Optional[int] = None,
         corpus_parallel: Optional[int] = None,
-    ) -> Tuple[Array, Array, dict]:
+    ) -> SearchResult:
         """Batched hybrid search with per-query cost-based routing.
 
         New call style::
@@ -186,18 +189,18 @@ class HybridIndex:
         HybridIndex is one corpus shard — multi-shard SPMD dispatch lives
         in ``repro.distributed.corpus_parallel`` / ``ServingEngine``.
 
-        Legacy call style ``search(xq, predicates, k=..., use_kernel=...)``
-        still works: bare positional queries wrap into a request, and the
-        five knob kwargs fold into a spec behind a ``DeprecationWarning``
-        (one release of shim support).
+        Bare positional queries still wrap into a request, but the five
+        retired legacy knob kwargs now raise ``TypeError`` naming the
+        matching ``ExecutionSpec`` field.
 
         Both routes dispatch through the jit-bucketed batch pipeline: the
         graph route via :func:`repro.core.batched.search_batch` (with this
         index's compiled-variant cache), the pre-filter route through the
         same bucket padding — so ragged request sizes never re-trace.
 
-        Returns (ids (B,k), dists (B,k), info) where info records the route
-        taken per query and search stats.
+        Returns a :class:`repro.core.plan.SearchResult` (ids (B,k), dists
+        (B,k), per-query stats + routes); legacy three-way unpacking
+        ``ids, d, info = index.search(...)`` keeps working this release.
         """
         cfg = self.config
         if isinstance(request, SearchRequest):
@@ -240,10 +243,11 @@ class HybridIndex:
                 metric=cfg.metric, compressed_level0=False,
                 max_expansions=cfg.max_expansions, spec=spec,
                 buckets=cfg.buckets, cache=self.cache)
-            info = dict(routes=np.full((b,), "graph"),
-                        selectivity_est=np.ones((b,)),
-                        dist_comps=np.asarray(stats.dist_comps))
-            return ids, d, info
+            return SearchResult(
+                ids=ids, dists=d,
+                stats=dict(selectivity_est=np.ones((b,)),
+                           dist_comps=np.asarray(stats.dist_comps)),
+                routes=np.full((b,), "graph"), legacy_arity=3)
 
         # -- compile once: one fused pass for masks, one for estimates --
         program = (predicates if isinstance(predicates, PredicateProgram)
@@ -284,6 +288,8 @@ class HybridIndex:
             out_d[gr_idx] = np.asarray(d)
             dist_comps[gr_idx] = np.asarray(stats.dist_comps)
 
-        info = dict(routes=np.where(use_pre, "prefilter", "graph"),
-                    selectivity_est=s_est, dist_comps=dist_comps)
-        return jnp.asarray(out_ids), jnp.asarray(out_d), info
+        return SearchResult(
+            ids=jnp.asarray(out_ids), dists=jnp.asarray(out_d),
+            stats=dict(selectivity_est=np.asarray(s_est),
+                       dist_comps=dist_comps),
+            routes=np.where(use_pre, "prefilter", "graph"), legacy_arity=3)

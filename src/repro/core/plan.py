@@ -41,10 +41,10 @@ the bucketed shape for variant-cache keys.
 """
 from __future__ import annotations
 
-import warnings
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from functools import partial
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import (Any, Dict, List, NamedTuple, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -120,28 +120,26 @@ def resolve_execution_spec(spec: Optional[ExecutionSpec], where: str,
                            base: Optional[ExecutionSpec] = None,
                            stacklevel: int = 3,
                            **legacy) -> ExecutionSpec:
-    """Deprecation shim: fold legacy knob kwargs into an ExecutionSpec.
+    """Resolve the ``spec=`` argument; reject retired legacy knob kwargs.
 
-    ``legacy`` holds the old per-call knob kwargs (``None`` = not passed).
-    Passing any of them emits a ``DeprecationWarning`` and overlays them
-    on ``base`` (defaults to ``ExecutionSpec()``); combining them with an
-    explicit ``spec`` is an error.  With no legacy knobs, returns ``spec``
-    (or ``base``/the default spec).
+    The five per-call knob kwargs (``use_kernel``/``interpret``/
+    ``expand_kernel``/``data_parallel``/``corpus_parallel``) were
+    deprecated for one release behind a ``DeprecationWarning`` shim and
+    are now REMOVED: passing any of them (non-``None``) raises
+    ``TypeError`` with a migration hint naming the :class:`ExecutionSpec`
+    field.  With no legacy knobs, returns ``spec`` (or ``base``/the
+    default spec).
     """
     passed = {k: v for k, v in legacy.items() if v is not None}
     unknown = set(passed) - set(_KNOB_NAMES)
     if unknown:
         raise TypeError(f"{where}: unknown execution knobs {sorted(unknown)}")
     if passed:
-        if spec is not None:
-            raise TypeError(
-                f"{where}: pass either spec=ExecutionSpec(...) or the "
-                f"legacy knob kwargs {sorted(passed)}, not both")
-        warnings.warn(
-            f"{where}: the {sorted(passed)} kwargs are deprecated; pass "
-            "spec=ExecutionSpec(...) instead (one release of shim support)",
-            DeprecationWarning, stacklevel=stacklevel)
-        return (base or ExecutionSpec()).overlay(**passed)
+        hints = ", ".join(
+            f"spec=ExecutionSpec({k}=...)" for k in sorted(passed))
+        raise TypeError(
+            f"{where}: the legacy execution-knob kwargs {sorted(passed)} "
+            f"were removed; pass {hints} instead")
     if spec is not None:
         return spec
     return base or ExecutionSpec()
@@ -172,6 +170,134 @@ class SearchRequest:
     k: Optional[int] = None
     ef: Optional[int] = None
     route: Optional[str] = None
+
+
+# ---------------------------------------------------------------------------
+# SearchResult — the one typed result shape for index / engine / runtime
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class SearchResult:
+    """Typed result of a hybrid search: one shape for every surface.
+
+    ``ids`` (B, k) int32 global row ids (-1 = empty slot); ``dists``
+    (B, k) float32 (``inf`` on empty slots); ``stats`` per-query stat
+    arrays keyed by name (e.g. ``dist_comps``, ``selectivity_est``);
+    ``routes`` (B,) route actually taken per query (``"graph"`` /
+    ``"prefilter"`` / ``"mixed"`` across shards); ``shed``/``degraded``
+    (B,) bool — ``shed`` marks requests the runtime refused under
+    backpressure, ``degraded`` marks results produced with shards
+    missing (including the all-shards-down -1/inf sentinel).
+
+    Registered as a pytree (arrays are leaves; ``legacy_arity`` and
+    ``routes`` ride in the aux data) so results slice/concatenate with
+    ``tree_map`` like any other value.
+
+    Tuple unpacking keeps working for this release via ``__iter__``:
+    ``legacy_arity=2`` yields ``(ids, dists)`` (engine/runtime call
+    sites), ``legacy_arity=3`` yields ``(ids, dists, info)`` matching
+    the old ``HybridIndex.search`` return.
+    """
+
+    ids: Array
+    dists: Array
+    stats: Dict[str, Any] = field(default_factory=dict)
+    routes: Optional[np.ndarray] = None
+    shed: Optional[np.ndarray] = None
+    degraded: Optional[np.ndarray] = None
+    legacy_arity: int = 2
+
+    def tree_flatten(self):
+        return ((self.ids, self.dists, self.stats, self.shed,
+                 self.degraded),
+                (self.routes if self.routes is None
+                 else tuple(self.routes), self.legacy_arity))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        routes = aux[0] if aux[0] is None else np.asarray(aux[0])
+        return cls(ids=children[0], dists=children[1], stats=children[2],
+                   shed=children[3], degraded=children[4], routes=routes,
+                   legacy_arity=aux[1])
+
+    @property
+    def info(self) -> Dict[str, Any]:
+        """The legacy ``HybridIndex.search`` info dict, reconstructed."""
+        out = dict(self.stats)
+        if self.routes is not None:
+            out["routes"] = self.routes
+        return out
+
+    @property
+    def n_queries(self) -> int:
+        return int(self.ids.shape[0])
+
+    def __iter__(self):
+        yield self.ids
+        yield self.dists
+        if self.legacy_arity >= 3:
+            yield self.info
+
+    def __len__(self) -> int:
+        return max(2, self.legacy_arity)
+
+    def __getitem__(self, i):
+        return tuple(self)[i]
+
+    def take(self, idx) -> "SearchResult":
+        """Row-subset the result (e.g. split a coalesced batch back into
+        its member requests)."""
+        stats = {name: np.asarray(v)[idx] for name, v in self.stats.items()}
+        return SearchResult(
+            ids=self.ids[idx], dists=self.dists[idx], stats=stats,
+            routes=None if self.routes is None else self.routes[idx],
+            shed=None if self.shed is None else self.shed[idx],
+            degraded=None if self.degraded is None else self.degraded[idx],
+            legacy_arity=self.legacy_arity)
+
+    @staticmethod
+    def concatenate(results: Sequence["SearchResult"]) -> "SearchResult":
+        """Row-concatenate results (the serve()/runtime merge step).
+
+        Optional fields (routes/shed/degraded) and stats keys must agree
+        across parts — all parts come from the same engine surface."""
+        if not results:
+            raise ValueError("concatenate needs at least one result")
+        first = results[0]
+        stats = {name: np.concatenate(
+                     [np.asarray(r.stats[name]) for r in results])
+                 for name in first.stats}
+
+        def _cat(get, np_cat):
+            vals = [get(r) for r in results]
+            return None if vals[0] is None else np_cat(vals)
+
+        return SearchResult(
+            ids=jnp.concatenate([r.ids for r in results]),
+            dists=jnp.concatenate([r.dists for r in results]),
+            stats=stats,
+            routes=_cat(lambda r: r.routes, np.concatenate),
+            shed=_cat(lambda r: r.shed, np.concatenate),
+            degraded=_cat(lambda r: r.degraded, np.concatenate),
+            legacy_arity=first.legacy_arity)
+
+
+def sentinel_result(b: int, k: int, shed: bool = False,
+                    legacy_arity: int = 2) -> SearchResult:
+    """The -1/inf empty result set: the all-shards-down degrade shape,
+    reused by the runtime's shed-load path (``shed=True``).  Sentinels
+    are RESULTS, not exceptions — the serving contract is that overload
+    and hard degradation answer in-band."""
+    return SearchResult(
+        ids=jnp.full((b, k), -1, jnp.int32),
+        dists=jnp.full((b, k), jnp.inf, jnp.float32),
+        stats=dict(dist_comps=np.zeros((b,), np.int64)),
+        routes=np.full((b,), "none"),
+        shed=np.full((b,), shed),
+        degraded=np.full((b,), not shed),
+        legacy_arity=legacy_arity)
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +503,47 @@ class PredicateProgram:
             qbits=self.qbits[idx], depth=self.depth,
             regex_leaves=self.regex_leaves, schema=self.schema)
 
+    @staticmethod
+    def concat(programs: Sequence["PredicateProgram"]) -> "PredicateProgram":
+        """Row-concatenate programs sharing one admission shape.
+
+        The runtime's coalescing step: requests admitted under the same
+        :func:`admission_key` (identical ``shape_sig``/schema/regex
+        leaves) concatenate into one program whose batch is exactly the
+        member rows, so a coalesced dispatch hits the same compiled
+        variant as any other batch of that shape.  Mixing shapes is a
+        bug in the grouping layer and fails loudly here.
+        """
+        if not programs:
+            raise ValueError("concat needs at least one program")
+        first = programs[0]
+        for p in programs[1:]:
+            if (p.shape_sig != first.shape_sig
+                    or p.regex_leaves != first.regex_leaves
+                    or p.schema != first.schema):
+                raise ValueError(
+                    f"cannot concat programs of different admission "
+                    f"shapes: {p.shape_sig} vs {first.shape_sig} "
+                    "(group by admission_key before coalescing)")
+        if len(programs) == 1:
+            return first
+        # host-side concatenate: coalescing happens per dispatch with
+        # arbitrary row-count splits, and an eager device concatenate
+        # would mint a one-off XLA op per novel split shape — numpy keeps
+        # the coalescing free and lets the (bucket-shaped) search call be
+        # the only jit entry
+        cat = np.concatenate
+        return PredicateProgram(
+            ops=cat([p.ops for p in programs]),
+            slot=cat([p.slot for p in programs]),
+            lo=cat([p.lo for p in programs]),
+            hi=cat([p.hi for p in programs]),
+            vals=cat([p.vals for p in programs]),
+            nval=cat([p.nval for p in programs]),
+            qbits=cat([p.qbits for p in programs]),
+            depth=first.depth, regex_leaves=first.regex_leaves,
+            schema=first.schema)
+
     # -- convenience front door ------------------------------------------
     def evaluate(self, table: AttributeTable) -> Array:
         """(B, n) bool pass-masks over ``table`` in one fused jit call.
@@ -400,6 +567,21 @@ class PredicateProgram:
         cols = pack_columns(table, self.schema)
         aux = regex_aux(table, self.regex_leaves)
         return _evaluate_jit(prog, cols.ints, cols.bitsets, aux)[:b]
+
+
+def admission_key(program: "PredicateProgram", k: int, ef: int,
+                  route: Optional[str]) -> tuple:
+    """The runtime's admission-queue grouping key.
+
+    Requests whose programs share a bucketed trace shape (``shape_sig``),
+    regex-leaf set, schema, and ``k``/``ef``/``route`` coalesce into one
+    dispatch: their programs concatenate cleanly
+    (:meth:`PredicateProgram.concat`) and the batch hits an
+    already-compiled variant — mixed predicate arities land in separate
+    groups instead of forcing retraces.
+    """
+    return (program.shape_sig, program.regex_leaves, program.schema,
+            int(k), int(ef), route)
 
 
 def _bucket_up(x: int, multiple: int, floor: int) -> int:
@@ -516,10 +698,13 @@ def compile_predicates(preds: Sequence[Predicate],
             if qb:
                 qbits[qi, li, : len(qb)] = qb
     regex_leaves = tuple(sorted(regex_slots, key=regex_slots.get))
+    # the columnar IR stays host-side (numpy): row-slicing and
+    # concatenation are per-request serving operations where a device
+    # array would turn every ``take`` into a traced gather dispatch —
+    # the evaluator's jit boundary moves rows on-device exactly once
     return PredicateProgram(
-        ops=jnp.asarray(ops), slot=jnp.asarray(slot), lo=jnp.asarray(lo),
-        hi=jnp.asarray(hi), vals=jnp.asarray(vals), nval=jnp.asarray(nval),
-        qbits=jnp.asarray(qbits), depth=depth, regex_leaves=regex_leaves,
+        ops=ops, slot=slot, lo=lo, hi=hi, vals=vals, nval=nval,
+        qbits=qbits, depth=depth, regex_leaves=regex_leaves,
         schema=schema)
 
 

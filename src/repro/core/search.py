@@ -402,8 +402,8 @@ def hybrid_search(
     expansion through the neighbor_expand kernel (``spec.interpret=True``
     for CPU execution; compiled on TPU); the default spec is the pure-jnp
     reference path — both return identical neighbor ids.
-    ``use_kernel``/``interpret``/``expand_kernel`` remain as a deprecated
-    kwarg shim for one release (they warn and fold into a spec).
+    The retired ``use_kernel``/``interpret``/``expand_kernel`` kwargs
+    raise ``TypeError`` with the matching ``ExecutionSpec`` field.
     Returns ids (B, k), dists (B, k), SearchStats with (B,) fields.
     """
     spec = resolve_execution_spec(
@@ -451,8 +451,9 @@ def hybrid_search_sharded(
     point's historical default is ALL local devices, but an explicit
     ``spec=ExecutionSpec()`` means what it says — ``data_parallel=1``,
     single device; pass ``ExecutionSpec(data_parallel=0)`` to shard over
-    every local device.  The positional ``data_parallel`` arg and the
-    kernel knob kwargs are the deprecated shim.  ``xq`` is padded up to a mesh
+    every local device.  The retired positional ``data_parallel`` arg and
+    kernel knob kwargs raise ``TypeError`` naming the ``ExecutionSpec``
+    field.  ``xq`` is padded up to a mesh
     multiple (padding lanes discarded), and results are bit-identical to
     the single-device path.  ``pass_mask=None`` runs the unfiltered
     plain-HNSW substrate, as in :func:`repro.core.batched.search_batch`.
@@ -465,7 +466,7 @@ def hybrid_search_sharded(
         spec, "hybrid_search_sharded", use_kernel=use_kernel,
         interpret=interpret, expand_kernel=expand_kernel,
         data_parallel=data_parallel)
-    if not spec_given and data_parallel is None:
+    if not spec_given:
         # historical default of this entry point: all local devices
         spec = spec.overlay(data_parallel=0)
     if pass_mask is None:
@@ -512,8 +513,8 @@ def ann_search(
 ):
     """Plain (unfiltered) HNSW ANN search — baseline substrate.
 
-    Execution knobs ride in ``spec``; the ``use_kernel``/``interpret``
-    kwargs are the deprecated shim (one release)."""
+    Execution knobs ride in ``spec``; the retired ``use_kernel``/
+    ``interpret`` kwargs raise ``TypeError``."""
     spec = resolve_execution_spec(
         spec, "ann_search", use_kernel=use_kernel, interpret=interpret)
     return _hybrid_search_jit(graph, x, xq, None, k, ef, "hnsw", m, 0,

@@ -1,1 +1,2 @@
 from .engine import ServingEngine, EngineConfig, merge_topk
+from .runtime import RuntimeConfig, RuntimeStats, ServingRuntime, Ticket

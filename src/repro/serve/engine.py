@@ -33,9 +33,13 @@ Operational wrapper around HybridIndex for production serving:
     Both paths are bit-identical (gated in tests/test_corpus_parallel.py);
   * execution policy as ONE value — ``EngineConfig.spec``
     (:class:`repro.core.plan.ExecutionSpec`) bundles the kernel-routing
-    knobs and the ``(data, corpus)`` mesh shape; the individual
-    ``EngineConfig`` knob fields remain as a compatibility overlay
-    (``None`` defers to the AcornConfig knobs, as before);
+    knobs and the ``(data, corpus)`` mesh shape; the retired per-knob
+    ``EngineConfig`` overlay fields raise ``TypeError`` with a migration
+    hint (``None`` = unset defers to the AcornConfig spec);
+  * typed results — every serving surface returns a
+    :class:`repro.core.plan.SearchResult` (ids/dists/per-query stats +
+    route summary + shed/degraded flags); ``ids, d = engine.serve(...)``
+    tuple unpacking keeps working this release;
   * per-query cost-based routing (ACORN graph vs pre-filter, §5.2) — done
     inside HybridIndex on the host path; the SPMD path computes the same
     per-(shard, query) decisions from each shard's sketch (one fused
@@ -60,7 +64,8 @@ import numpy as np
 
 from repro.core import AcornConfig, HybridIndex, Predicate, VariantCache
 from repro.core.plan import (ExecutionSpec, PredicateProgram, SearchRequest,
-                             TableSchema, compile_predicates)
+                             SearchResult, TableSchema, _KNOB_NAMES,
+                             compile_predicates, sentinel_result)
 from repro.core.predicates import AttributeTable
 from repro.distributed.collectives import merge_topk  # noqa: F401  (re-export)
 from repro.distributed.corpus_parallel import (ShardedCorpus,
@@ -78,19 +83,26 @@ class EngineConfig:
     ef: int = 64
     n_shards: int = 1
     duplicate_dispatch: bool = False  # straggler mitigation (mirrored shards)
-    # execution policy as one value; None = derive from AcornConfig plus
-    # the legacy overlay knobs below
+    # execution policy as one value; None = derive from AcornConfig
     spec: Optional[ExecutionSpec] = None
-    # legacy per-knob overlay (None -> AcornConfig knob), kept one release
+    # RETIRED legacy per-knob overlay: the fields remain declared so that
+    # old configs fail with a migration hint instead of a silent ignore —
+    # any non-None value raises TypeError in __post_init__
     use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None
     expand_kernel: Optional[bool] = None
-    data_parallel: Optional[int] = None  # 0 = all local devices
-    # corpus-mesh axis size for the SPMD path. None -> AcornConfig knob;
-    # None/0 there = auto (n_shards when the host has the devices). An
-    # explicit value must equal n_shards (one shard per corpus device).
+    data_parallel: Optional[int] = None
     corpus_parallel: Optional[int] = None
     host_fallback: bool = False  # force the host-loop oracle path
+
+    def __post_init__(self):
+        passed = sorted(n for n in _KNOB_NAMES
+                        if getattr(self, n) is not None)
+        if passed:
+            hints = ", ".join(f"spec=ExecutionSpec({n}=...)" for n in passed)
+            raise TypeError(
+                f"EngineConfig: the legacy knob fields {passed} were "
+                f"removed; pass {hints} instead")
 
 
 @dataclasses.dataclass
@@ -136,24 +148,11 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def execution_spec(self) -> ExecutionSpec:
         """The engine's resolved execution policy: ``EngineConfig.spec``
-        when set (the new style), else the AcornConfig spec overlaid with
-        the legacy per-knob EngineConfig fields (``None`` = defer).
-        Combining an explicit ``spec`` with legacy knob fields is an
-        error, matching every other entry point's shim — a silently
-        winning legacy field would invert the migrated config."""
-        c = self.cfg
-        legacy = dict(use_kernel=c.use_kernel, interpret=c.interpret,
-                      expand_kernel=c.expand_kernel,
-                      data_parallel=c.data_parallel,
-                      corpus_parallel=c.corpus_parallel)
-        if c.spec is not None:
-            conflicts = sorted(k for k, v in legacy.items() if v is not None)
-            if conflicts:
-                raise TypeError(
-                    f"EngineConfig: pass either spec=ExecutionSpec(...) or "
-                    f"the legacy knob fields {conflicts}, not both")
-            return c.spec
-        return self.acorn.execution_spec().overlay(**legacy)
+        when set, else the AcornConfig spec.  (The legacy per-knob
+        EngineConfig overlay is retired — ``__post_init__`` rejects it.)"""
+        if self.cfg.spec is not None:
+            return self.cfg.spec
+        return self.acorn.execution_spec()
 
     def spmd_mesh_shape(self) -> Optional[Tuple[int, int]]:
         """The ``(data, corpus)`` mesh the SPMD path would run on, or
@@ -199,7 +198,8 @@ class ServingEngine:
         Accepts a :class:`SearchRequest` (whose ``k``/``ef``/``route``
         override the engine defaults for this call) or the legacy
         ``(xq, predicates)`` pair; ``predicates`` may be trees or a
-        pre-compiled program.
+        pre-compiled program.  Returns a :class:`SearchResult`
+        (``ids, d = ...`` unpacking still works).
         """
         xq, preds, k, ef, route = self._unpack(request, predicates)
         shape = self.spmd_mesh_shape()
@@ -307,13 +307,12 @@ class ServingEngine:
         self.stats["batches"] += 1
         if not alive.any():
             # every shard (and mirror) down: degrade to an empty result set
-            return (jnp.full((b, k), -1, jnp.int32),
-                    jnp.full((b, k), jnp.inf, jnp.float32))
+            return sentinel_result(b, k)
 
         variant = acorn.variant
         spec = self.execution_spec().resolve(data_parallel=dp,
                                              corpus_parallel=cp)
-        ids, d, _, _ = corpus_search_batch(
+        ids, d, dcs, _ = corpus_search_batch(
             corpus, xq, program, aux, jnp.asarray(pre_ids),
             jnp.asarray(pre_d), jnp.asarray(use_pre), jnp.asarray(alive),
             k=k, ef=ef, variant=variant, m=acorn.M,
@@ -321,7 +320,30 @@ class ServingEngine:
             compressed_level0=acorn.compress and variant == "acorn-gamma",
             max_expansions=acorn.max_expansions, spec=spec,
             buckets=acorn.buckets, cache=self.spmd_cache)
-        return ids, d
+        return self._result(ids, d,
+                            dist_comps=np.asarray(dcs)[alive].sum(axis=0),
+                            pre_counts=use_pre[alive].sum(axis=0),
+                            n_alive=int(alive.sum()),
+                            degraded=not alive.all())
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _result(ids, d, dist_comps, pre_counts, n_alive: int,
+                degraded: bool) -> SearchResult:
+        """Assemble the engine's typed result: per-query route summary
+        across the shards that answered (``mixed`` = the shard sketches
+        disagreed), total distance comps, and the degraded flag (some
+        configured shard contributed nothing — results are incomplete
+        but serving continued)."""
+        b = int(ids.shape[0])
+        pre_counts = np.asarray(pre_counts)
+        routes = np.where(pre_counts >= n_alive, "prefilter",
+                          np.where(pre_counts == 0, "graph", "mixed"))
+        return SearchResult(
+            ids=ids, dists=d,
+            stats=dict(dist_comps=np.asarray(dist_comps)),
+            routes=routes, shed=np.zeros((b,), bool),
+            degraded=np.full((b,), degraded), legacy_arity=2)
 
     # ------------------------------------------------------------------
     def search_batch_host(self, request: Union[SearchRequest, "jnp.ndarray"],
@@ -346,6 +368,9 @@ class ServingEngine:
         shard_spec = dataclasses.replace(self.execution_spec(),
                                          corpus_parallel=None)
         all_ids, all_d = [], []
+        pre_counts = np.zeros((b,), np.int64)
+        dist_comps = np.zeros((b,), np.int64)
+        n_alive = 0
         for shard in self.shards:
             mirrors = 2 if (cfg.duplicate_dispatch and cfg.n_shards > 1) else 1
             result = None
@@ -357,32 +382,35 @@ class ServingEngine:
                         # drops out and no duplicate work happens
                         self.stats["duplicated_dispatches"] += 1
                     continue  # primary "failed"; mirror answers
-                ids, d, info = shard.index.search(
+                result = shard.index.search(
                     SearchRequest(xq=xq, predicates=program, k=k, ef=ef,
                                   route=route),
                     spec=shard_spec)
-                result = (ids, d, info)
                 break
             if result is None:  # all mirrors down -> shard contributes none
                 continue
-            ids, d, info = result
-            gids = jnp.where(ids >= 0, ids + shard.base, -1)
+            n_alive += 1
+            gids = jnp.where(result.ids >= 0, result.ids + shard.base, -1)
             all_ids.append(gids)
-            all_d.append(d)
+            all_d.append(result.dists)
+            pre_counts += result.routes == "prefilter"
+            dist_comps += np.asarray(result.stats["dist_comps"])
             self.stats["prefilter_routed"] += int(
-                (info["routes"] == "prefilter").sum())
+                (result.routes == "prefilter").sum())
             self.stats["graph_routed"] += int(
-                (info["routes"] == "graph").sum())
+                (result.routes == "graph").sum())
         self.stats["queries"] += b
         self.stats["batches"] += 1
         if not all_ids:
             # every shard (and mirror) down: degrade to an empty result set
             # instead of crashing the serving path — availability first
-            return (jnp.full((b, k), -1, jnp.int32),
-                    jnp.full((b, k), jnp.inf, jnp.float32))
+            return sentinel_result(b, k)
         ids = jnp.concatenate(all_ids, axis=1)
         d = jnp.concatenate(all_d, axis=1)
-        return merge_topk(ids, d, k)
+        mi, md = merge_topk(ids, d, k)
+        return self._result(mi, md, dist_comps=dist_comps,
+                            pre_counts=pre_counts, n_alive=n_alive,
+                            degraded=n_alive < cfg.n_shards)
 
     # ------------------------------------------------------------------
     def serve(self, request: Union[SearchRequest, "jnp.ndarray"],
@@ -400,17 +428,15 @@ class ServingEngine:
         b = self.cfg.batch_size
         n = xq.shape[0]
         program = self._program(preds, n)
-        outs_i, outs_d = [], []
+        outs: List[SearchResult] = []
         for start in range(0, n, b):
             stop = min(start + b, n)
             req = SearchRequest(xq=xq[start:stop],
                                 predicates=program.take(slice(start, stop)),
                                 k=self.cfg.k if k is None else k, ef=ef,
                                 route=route)
-            ids, d = self.search_batch(req)
-            outs_i.append(ids)
-            outs_d.append(d)
-        return jnp.concatenate(outs_i), jnp.concatenate(outs_d)
+            outs.append(self.search_batch(req))
+        return SearchResult.concatenate(outs)
 
     # ------------------------------------------------------------------
     def trace_counts(self) -> Dict[int, Dict[int, int]]:

@@ -4,9 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (AcornConfig, HybridIndex, VariantCache,
-                        build_acorn_1, build_acorn_gamma, build_hnsw,
-                        hybrid_search, plan_chunks, search_batch)
+from repro.core import (AcornConfig, ExecutionSpec, HybridIndex,
+                        VariantCache, build_acorn_1, build_acorn_gamma,
+                        build_hnsw, hybrid_search, plan_chunks, search_batch)
 from repro.data import make_lcps_dataset, make_workload
 
 KEY = jax.random.PRNGKey(0)
@@ -90,9 +90,11 @@ def test_search_batch_kernel_on_off_identical_ids(ds, wl, graphs):
     masks = wl.masks(ds)
     kw = dict(k=10, ef=32, variant="acorn-gamma", m=8, m_beta=16,
               buckets=(16,), cache=VariantCache())
-    ids0, d0, _ = search_batch(g, ds.x, wl.xq, masks, use_kernel=False, **kw)
-    ids1, d1, _ = search_batch(g, ds.x, wl.xq, masks, use_kernel=True,
-                               interpret=True, **kw)
+    ids0, d0, _ = search_batch(g, ds.x, wl.xq, masks,
+                               spec=ExecutionSpec(use_kernel=False), **kw)
+    ids1, d1, _ = search_batch(g, ds.x, wl.xq, masks,
+                               spec=ExecutionSpec(use_kernel=True,
+                                                  interpret=True), **kw)
     np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-4)
 

@@ -10,10 +10,11 @@ try:  # property tests degrade to skips when hypothesis is absent
 except ImportError:  # pragma: no cover - exercised on minimal installs
     HAVE_HYPOTHESIS = False
 
-from repro.core import (AcornConfig, HybridIndex, OraclePartitionIndex,
-                        ann_search, build_acorn_1, build_acorn_gamma,
-                        build_hnsw, ground_truth, hybrid_search, masked_topk,
-                        postfilter_search, prefilter_search, recall_at_k)
+from repro.core import (AcornConfig, ExecutionSpec, HybridIndex,
+                        OraclePartitionIndex, ann_search, build_acorn_1,
+                        build_acorn_gamma, build_hnsw, ground_truth,
+                        hybrid_search, masked_topk, postfilter_search,
+                        prefilter_search, recall_at_k)
 from repro.core.graph import INVALID
 from repro.core.search import dedup_mask, first_m_true
 from repro.data import make_lcps_dataset, make_workload
@@ -211,9 +212,10 @@ def test_hybrid_kernel_on_off_identical_ids(ds, wl, acorn_graph, variant,
         ds.x, KEY, M=8)
     kw = dict(k=10, ef=48, variant=variant, m=8, m_beta=m_beta)
     ids0, d0, st0 = hybrid_search(g, ds.x, wl.xq, wl.masks(ds),
-                                  use_kernel=False, **kw)
+                                  spec=ExecutionSpec(use_kernel=False), **kw)
     ids1, d1, st1 = hybrid_search(g, ds.x, wl.xq, wl.masks(ds),
-                                  use_kernel=True, interpret=True, **kw)
+                                  spec=ExecutionSpec(use_kernel=True,
+                                                     interpret=True), **kw)
     np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-4)
     np.testing.assert_array_equal(np.asarray(st0.dist_comps),

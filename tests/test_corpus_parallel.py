@@ -198,7 +198,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 assert jax.local_device_count() == 8
 
-from repro.core import AcornConfig, recall_at_k
+from repro.core import AcornConfig, ExecutionSpec, recall_at_k
 from repro.data import make_lcps_dataset, make_workload
 from repro.serve import EngineConfig, ServingEngine
 
@@ -244,10 +244,11 @@ def assert_parity(eng, tag):
 # ---- every (data, corpus) shape of the 8-device mesh, bit-identical ----
 for dp, cp in [(2, 4), (4, 2), (1, 8), (8, 1)]:
     acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32,
-                        buckets=(16, 64), data_parallel=dp)
+                        buckets=(16, 64))
     eng = ServingEngine(ds.x, ds.table, acorn,
                         EngineConfig(batch_size=BS, k=10, n_shards=cp,
-                                     corpus_parallel=cp))
+                                     spec=ExecutionSpec(data_parallel=dp,
+                                                        corpus_parallel=cp)))
     assert eng.spmd_mesh_shape() == (dp, cp), eng.spmd_mesh_shape()
     ids_m, _ = assert_parity(eng, f"mesh {dp}x{cp}")
     # absolute quality guard (parity alone can't catch a bug both paths
@@ -273,11 +274,11 @@ assert eng.spmd_mesh_shape() == (4, 2), eng.spmd_mesh_shape()
 assert_parity(eng, "auto mesh")
 
 # ---- fault injection: mirrored failover (duplicate dispatch) ----
-acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32, buckets=(16, 64),
-                    data_parallel=2)
+acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32, buckets=(16, 64))
+mesh24 = ExecutionSpec(data_parallel=2, corpus_parallel=4)
 eng = ServingEngine(ds.x, ds.table, acorn,
                     EngineConfig(batch_size=BS, k=10, n_shards=4,
-                                 corpus_parallel=4, duplicate_dispatch=True))
+                                 spec=mesh24, duplicate_dispatch=True))
 assert eng.spmd_mesh_shape() == (2, 4)
 ids0, d0 = assert_parity(eng, "mirrored healthy")
 assert eng.stats["duplicated_dispatches"] == 0
@@ -299,7 +300,7 @@ assert eng.stats["duplicated_dispatches"] == before
 # ---- fault injection: hard loss without mirrors ----
 eng = ServingEngine(ds.x, ds.table, acorn,
                     EngineConfig(batch_size=BS, k=10, n_shards=4,
-                                 corpus_parallel=4,
+                                 spec=mesh24,
                                  duplicate_dispatch=False))
 healthy_ids, _ = assert_parity(eng, "unmirrored healthy")
 eng.fail_shard(1)

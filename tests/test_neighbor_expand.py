@@ -219,8 +219,10 @@ def test_hybrid_search_expand_kernel_knob(graph_ds):
     labels = np.asarray(ds.table.int_cols["label"])
     masks = jnp.asarray(labels[None, :] == np.arange(4)[:, None] % 8)
     kw = dict(k=5, ef=24, variant="acorn-gamma", m=8, m_beta=16)
+    from repro.core import ExecutionSpec
     ids0, d0, st0 = hybrid_search(g, ds.x, xq, masks, **kw)
-    ids1, d1, st1 = hybrid_search(g, ds.x, xq, masks, expand_kernel=True,
+    ids1, d1, st1 = hybrid_search(g, ds.x, xq, masks,
+                                  spec=ExecutionSpec(expand_kernel=True),
                                   **kw)
     np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
     np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))

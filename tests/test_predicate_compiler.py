@@ -12,13 +12,12 @@ Three gates:
 2. **Regex leaf caching** — host-evaluated ``(column, pattern)`` bitmaps
    are computed once per table and sliced through ``take``; the compiled
    ``re`` object is shared process-wide.
-3. **Deprecation shim** — the old knob-kwarg call style still works, emits
-   ``DeprecationWarning``, and returns bit-identical results to the
-   ``ExecutionSpec`` style on a golden-recall-shaped workload; the
-   resolved spec is the single variant-cache key component.
+3. **Legacy-kwarg removal** — the retired knob-kwarg call style fails
+   loudly with a ``TypeError`` naming the ``ExecutionSpec`` replacement
+   field (never a silent ignore); the ``ExecutionSpec`` style serves a
+   golden-recall-shaped workload and the resolved spec is the single
+   variant-cache key component.
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -281,7 +280,7 @@ def test_compiled_re_object_shared():
 
 
 # ---------------------------------------------------------------------------
-# 3. deprecation shim + ExecutionSpec keys
+# 3. legacy-kwarg removal + ExecutionSpec keys
 # ---------------------------------------------------------------------------
 
 # golden-recall-cell geometry (tests/test_golden_recall.py), small variant
@@ -299,69 +298,77 @@ def golden_cell():
     return ds, wl, g
 
 
-def test_hybrid_search_shim_warns_and_matches(golden_cell):
+def test_hybrid_search_legacy_kwargs_raise(golden_cell):
+    """The retired per-call knobs fail loudly with a migration hint that
+    names the ExecutionSpec field — never a silent ignore."""
     ds, wl, g = golden_cell
     masks = wl.masks(ds)
     kw = dict(k=K, ef=EF, variant="acorn-gamma", m=M, m_beta=M_BETA)
     ids_new, d_new, _ = hybrid_search(g, ds.x, wl.xq, masks,
                                       spec=ExecutionSpec(), **kw)
-    with pytest.warns(DeprecationWarning):
-        ids_old, d_old, _ = hybrid_search(g, ds.x, wl.xq, masks,
-                                          use_kernel=False, interpret=True,
-                                          **kw)
-    np.testing.assert_array_equal(np.asarray(ids_new), np.asarray(ids_old))
-    np.testing.assert_array_equal(np.asarray(d_new), np.asarray(d_old))
+    assert ids_new.shape == (B, K)
+    with pytest.raises(
+            TypeError,
+            match=r"use_kernel.*were removed.*"
+                  r"spec=ExecutionSpec\(use_kernel=\.\.\.\)"):
+        hybrid_search(g, ds.x, wl.xq, masks, use_kernel=False,
+                      interpret=True, **kw)
 
 
-def test_search_batch_shim_warns_matches_and_keys_on_spec(golden_cell):
+def test_search_batch_legacy_kwargs_raise_and_keys_on_spec(golden_cell):
     ds, wl, g = golden_cell
     masks = wl.masks(ds)
     kw = dict(k=K, ef=EF, variant="acorn-gamma", m=M, m_beta=M_BETA,
               buckets=(B,))
-    c_new = VariantCache()
-    ids_new, d_new, _ = search_batch(g, ds.x, wl.xq, masks, cache=c_new,
-                                     spec=ExecutionSpec(), **kw)
-    c_old = VariantCache()
-    with pytest.warns(DeprecationWarning):
-        ids_old, d_old, _ = search_batch(g, ds.x, wl.xq, masks, cache=c_old,
-                                         use_kernel=False, data_parallel=1,
-                                         **kw)
-    np.testing.assert_array_equal(np.asarray(ids_new), np.asarray(ids_old))
-    np.testing.assert_array_equal(np.asarray(d_new), np.asarray(d_old))
+    cache = VariantCache()
+    ids, d, _ = search_batch(g, ds.x, wl.xq, masks, cache=cache,
+                             spec=ExecutionSpec(), **kw)
+    assert ids.shape == (B, K)
     # the resolved ExecutionSpec is the single execution-knob key component
-    for cache in (c_new, c_old):
-        (key,) = cache.fns
-        spec = key[-1]
-        assert isinstance(spec, ExecutionSpec)
-        assert spec == ExecutionSpec(use_kernel=False, interpret=True,
-                                     expand_kernel=False, data_parallel=1,
-                                     corpus_parallel=1)
-    assert list(c_new.fns) == list(c_old.fns)  # same variant either way
+    (key,) = cache.fns
+    spec = key[-1]
+    assert isinstance(spec, ExecutionSpec)
+    assert spec == ExecutionSpec(use_kernel=False, interpret=True,
+                                 expand_kernel=False, data_parallel=1,
+                                 corpus_parallel=1)
+    # every retired kwarg is named in the error, sorted, with its hint
+    with pytest.raises(
+            TypeError,
+            match=r"\['data_parallel', 'use_kernel'\] were removed.*"
+                  r"spec=ExecutionSpec\(data_parallel=\.\.\.\), "
+                  r"spec=ExecutionSpec\(use_kernel=\.\.\.\)"):
+        search_batch(g, ds.x, wl.xq, masks, cache=VariantCache(),
+                     use_kernel=False, data_parallel=1, **kw)
 
 
 def test_search_batch_rejects_spec_plus_legacy_knobs(golden_cell):
+    """A migrated spec= call that still carries a legacy knob fails the
+    same way a pure-legacy call does."""
     ds, wl, g = golden_cell
-    with pytest.raises(TypeError):
+    with pytest.raises(TypeError, match="were removed"):
         search_batch(g, ds.x, wl.xq, wl.masks(ds), k=K, ef=EF,
                      spec=ExecutionSpec(), use_kernel=True)
 
 
-def test_hybrid_index_shim_warns_and_matches_request_style(golden_cell):
+def test_hybrid_index_legacy_kwargs_raise_and_request_parity(golden_cell):
     ds, wl, _ = golden_cell
     cfg = AcornConfig(M=M, gamma=CARD, m_beta=M_BETA, ef_search=EF,
                       buckets=(B,))
     idx = HybridIndex.build(ds.x, ds.table, cfg, seed=SEED)
     req = SearchRequest(xq=wl.xq, predicates=wl.predicates, k=K)
     ids_new, d_new, info_new = idx.search(req)
-    with pytest.warns(DeprecationWarning):
-        ids_old, d_old, info_old = idx.search(
-            wl.xq, wl.predicates, k=K, use_kernel=False, interpret=True,
-            data_parallel=1)
+    # positional (xq, predicates) style without knobs: same bits
+    ids_old, d_old, info_old = idx.search(wl.xq, wl.predicates, k=K)
     np.testing.assert_array_equal(np.asarray(ids_new), np.asarray(ids_old))
     np.testing.assert_array_equal(np.asarray(d_new), np.asarray(d_old))
     np.testing.assert_array_equal(info_new["routes"], info_old["routes"])
     np.testing.assert_array_equal(info_new["selectivity_est"],
                                   info_old["selectivity_est"])
+    # the retired kwargs fail loudly, naming the ExecutionSpec fields
+    with pytest.raises(TypeError,
+                       match=r"HybridIndex\.search.*were removed"):
+        idx.search(wl.xq, wl.predicates, k=K, use_kernel=False,
+                   interpret=True, data_parallel=1)
     # pre-compiled program through the request: same bits again
     prog = idx.compile(wl.predicates)
     assert isinstance(prog, PredicateProgram)
@@ -369,23 +376,19 @@ def test_hybrid_index_shim_warns_and_matches_request_style(golden_cell):
     np.testing.assert_array_equal(np.asarray(ids_new), np.asarray(ids_p))
 
 
-def test_engine_spec_field_matches_legacy_knobs(golden_cell):
+def test_engine_spec_field_and_request_parity(golden_cell):
     ds, wl, _ = golden_cell
     from repro.serve import EngineConfig, ServingEngine
     acorn = AcornConfig(M=M, gamma=CARD, m_beta=M_BETA, ef_search=EF,
                         buckets=(B,))
-    eng_old = ServingEngine(ds.x, ds.table, acorn,
-                            EngineConfig(batch_size=B, k=K, ef=EF,
-                                         n_shards=2, use_kernel=False))
-    eng_new = ServingEngine(ds.x, ds.table, acorn,
-                            EngineConfig(batch_size=B, k=K, ef=EF,
-                                         n_shards=2,
-                                         spec=ExecutionSpec()))
-    i_old, d_old = eng_old.serve(wl.xq, wl.predicates)
-    i_new, d_new = eng_new.serve(
+    eng = ServingEngine(ds.x, ds.table, acorn,
+                        EngineConfig(batch_size=B, k=K, ef=EF, n_shards=2,
+                                     spec=ExecutionSpec()))
+    i_pos, d_pos = eng.serve(wl.xq, wl.predicates)
+    i_req, d_req = eng.serve(
         SearchRequest(xq=wl.xq, predicates=wl.predicates, k=K))
-    np.testing.assert_array_equal(np.asarray(i_old), np.asarray(i_new))
-    np.testing.assert_array_equal(np.asarray(d_old), np.asarray(d_new))
+    np.testing.assert_array_equal(np.asarray(i_pos), np.asarray(i_req))
+    np.testing.assert_array_equal(np.asarray(d_pos), np.asarray(d_req))
 
 
 def test_search_request_k_defers_to_call_site(golden_cell):
@@ -483,20 +486,22 @@ def test_engine_honors_search_request_route(golden_cell):
     assert eng.stats["graph_routed"] - before_g == 2 * B
 
 
-def test_engine_config_rejects_spec_plus_legacy_knobs(golden_cell):
-    """EngineConfig.spec + legacy knob fields must fail loudly, matching
-    every other entry point's shim — not silently let the legacy field
-    win over a migrated config."""
-    from repro.serve import EngineConfig, ServingEngine
-    ds, _, _ = golden_cell
-    acorn = AcornConfig(M=M, gamma=CARD, m_beta=M_BETA, ef_search=EF,
-                        buckets=(B,))
-    eng = ServingEngine(ds.x, ds.table, acorn,
-                        EngineConfig(batch_size=B, k=K, n_shards=1,
-                                     spec=ExecutionSpec(use_kernel=True),
-                                     use_kernel=False))
-    with pytest.raises(TypeError, match="not both"):
-        eng.execution_spec()
+def test_engine_config_legacy_fields_raise():
+    """EngineConfig's retired knob fields fail loudly AT CONSTRUCTION,
+    naming the ExecutionSpec replacement — an old config can never be
+    silently ignored or half-applied."""
+    from repro.serve import EngineConfig
+    with pytest.raises(
+            TypeError,
+            match=r"\['corpus_parallel', 'use_kernel'\] were removed.*"
+                  r"spec=ExecutionSpec\(corpus_parallel=\.\.\.\)"):
+        EngineConfig(batch_size=B, k=K, n_shards=1, use_kernel=False,
+                     corpus_parallel=1)
+    # spec alongside a legacy field is rejected too — the legacy field can
+    # never silently win over a migrated config
+    with pytest.raises(TypeError, match="were removed"):
+        EngineConfig(batch_size=B, k=K, n_shards=1,
+                     spec=ExecutionSpec(use_kernel=True), use_kernel=False)
 
 
 def test_regex_caches_are_bounded(table):

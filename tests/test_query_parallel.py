@@ -61,12 +61,13 @@ def test_search_batch_clamps_oversized_data_parallel():
                           m_beta=16)
     kw = dict(k=5, ef=16, variant="acorn-gamma", m=8, m_beta=16,
               buckets=(16,))
+    from repro.core import ExecutionSpec
     ids1, d1, _ = search_batch(g, ds.x, wl.xq, masks, cache=VariantCache(),
-                               data_parallel=1, **kw)
+                               spec=ExecutionSpec(data_parallel=1), **kw)
     cache = VariantCache()
-    ids2, d2, _ = search_batch(g, ds.x, wl.xq, masks, cache=cache,
-                               data_parallel=2 * jax.local_device_count(),
-                               **kw)
+    ids2, d2, _ = search_batch(
+        g, ds.x, wl.xq, masks, cache=cache,
+        spec=ExecutionSpec(data_parallel=2 * jax.local_device_count()), **kw)
     np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
     np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
     # cache keys end with the resolved ExecutionSpec carrying the
@@ -85,8 +86,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 assert jax.local_device_count() == 8
 
-from repro.core import (AcornConfig, VariantCache, build_acorn_gamma,
-                        hybrid_search, hybrid_search_sharded, search_batch)
+from repro.core import (AcornConfig, ExecutionSpec, VariantCache,
+                        build_acorn_gamma, hybrid_search,
+                        hybrid_search_sharded, search_batch)
 from repro.data import make_lcps_dataset, make_workload
 from repro.serve import EngineConfig, ServingEngine
 
@@ -98,10 +100,12 @@ kw = dict(k=10, ef=32, variant="acorn-gamma", m=8, m_beta=16)
 
 # ---- sharded search_batch == single-device search_batch, bit-identical ----
 ids1, d1, st1 = search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64),
-                             cache=VariantCache(), data_parallel=1, **kw)
+                             cache=VariantCache(),
+                             spec=ExecutionSpec(data_parallel=1), **kw)
 c8 = VariantCache()
 ids8, d8, st8 = search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64),
-                             cache=c8, data_parallel=8, **kw)
+                             cache=c8, spec=ExecutionSpec(data_parallel=8),
+                             **kw)
 np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids8))
 np.testing.assert_array_equal(np.asarray(d1), np.asarray(d8))
 np.testing.assert_array_equal(np.asarray(st1.dist_comps),
@@ -112,12 +116,13 @@ np.testing.assert_array_equal(np.asarray(st1.hops), np.asarray(st8.hops))
 assert c8.bucket_traces() == {16: 1}, c8.bucket_traces()
 assert all(key[-1].data_parallel == 8 for key in c8.fns)
 search_batch(g, ds.x, wl.xq, masks, buckets=(16, 64), cache=c8,
-             data_parallel=8, **kw)
+             spec=ExecutionSpec(data_parallel=8), **kw)
 assert c8.num_traces == 1
 
 # ---- mesh-aware entry: ragged B padded to a mesh multiple ----
 idsS, dS, stS = hybrid_search_sharded(g, ds.x, wl.xq, masks,
-                                      data_parallel=8, **kw)
+                                      spec=ExecutionSpec(data_parallel=8),
+                                      **kw)
 idsH, dH, stH = hybrid_search(g, ds.x, wl.xq, masks, **kw)
 np.testing.assert_array_equal(np.asarray(idsS), np.asarray(idsH))
 np.testing.assert_allclose(np.asarray(dS), np.asarray(dH), rtol=1e-6)
@@ -126,18 +131,20 @@ np.testing.assert_array_equal(np.asarray(stS.dist_comps),
 
 # ---- unfiltered (masks=None) sharded path ----
 iN1, dN1, _ = search_batch(g, ds.x, wl.xq, None, buckets=(16,),
-                           cache=VariantCache(), data_parallel=1, **kw)
+                           cache=VariantCache(),
+                           spec=ExecutionSpec(data_parallel=1), **kw)
 iN8, dN8, _ = search_batch(g, ds.x, wl.xq, None, buckets=(16,),
-                           cache=VariantCache(), data_parallel=8, **kw)
+                           cache=VariantCache(),
+                           spec=ExecutionSpec(data_parallel=8), **kw)
 np.testing.assert_array_equal(np.asarray(iN1), np.asarray(iN8))
 
-# ---- EngineConfig.data_parallel end-to-end ----
+# ---- EngineConfig spec data_parallel end-to-end ----
 acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32, buckets=(16, 64))
 e1 = ServingEngine(ds.x, ds.table, acorn,
                    EngineConfig(batch_size=16, k=10, n_shards=2))
 e8 = ServingEngine(ds.x, ds.table, acorn,
                    EngineConfig(batch_size=16, k=10, n_shards=2,
-                                data_parallel=8))
+                                spec=ExecutionSpec(data_parallel=8)))
 ids_e1, d_e1 = e1.serve(wl.xq, wl.predicates)
 ids_e8, d_e8 = e8.serve(wl.xq, wl.predicates)
 np.testing.assert_array_equal(np.asarray(ids_e1), np.asarray(ids_e8))

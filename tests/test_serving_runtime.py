@@ -1,0 +1,376 @@
+"""Continuous-batching serving runtime: coalescing, determinism, SLO
+routing, backpressure, metrics — plus SPMD-vs-host parity under the
+runtime (8-virtual-device subprocess, like test_corpus_parallel.py).
+
+The single-threaded half drives ``step(now=...)`` with a manual clock so
+coalesce deadlines are exact and dispatch compositions are replayable;
+the threaded half smoke-tests the worker against the real clock.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import AcornConfig, SearchRequest
+from repro.core.predicates import And, Between, Equals
+from repro.data import make_lcps_dataset, make_workload
+from repro.serve import (EngineConfig, RuntimeConfig, ServingEngine,
+                         ServingRuntime)
+
+K, EF = 5, 16
+BUCKETS = (4, 8)          # coalesce cap = 8 queries
+
+
+class ManualClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def cell():
+    ds = make_lcps_dataset(n=400, d=8, card=4, seed=0)
+    wl = make_workload(ds, kind="equals", n_queries=32, k=K, seed=1, card=4)
+    acorn = AcornConfig(M=8, gamma=4, m_beta=16, ef_search=EF,
+                        buckets=BUCKETS)
+    eng = ServingEngine(ds.x, ds.table, acorn,
+                        EngineConfig(batch_size=8, k=K, ef=EF, n_shards=1))
+    return ds, wl, eng
+
+
+def reqs(wl, size, count, start=0):
+    out = []
+    for i in range(count):
+        s = start + i * size
+        out.append(SearchRequest(xq=wl.xq[s:s + size],
+                                 predicates=list(
+                                     wl.predicates[s:s + size]), k=K))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# coalescing + dispatch policy (manual clock)
+# ---------------------------------------------------------------------------
+
+
+def test_coalesce_deadline_holds_then_dispatches_one_batch(cell):
+    _, wl, eng = cell
+    clock = ManualClock()
+    rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=0.01),
+                        clock=clock)
+    tickets = [rt.submit(r) for r in reqs(wl, 2, 3)]
+    # under the cap and before the deadline: nothing moves
+    assert rt.step(now=0.0) == 0
+    assert all(not t.done() for t in tickets)
+    # deadline reached: all three coalesce into ONE dispatch
+    clock.t = 0.01
+    assert rt.step(now=0.01) == 3
+    assert all(t.done() for t in tickets)
+    assert rt.dispatch_log == [(0, 1, 2)]
+    assert rt.stats().batch_hist == {6: 1}
+
+
+def test_full_bucket_dispatches_before_deadline(cell):
+    _, wl, eng = cell
+    rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=10.0),
+                        clock=ManualClock())
+    tickets = [rt.submit(r) for r in reqs(wl, 2, 4)]  # 8 queries = cap
+    assert rt.step(now=0.0) == 4   # full: no deadline wait
+    assert all(t.done() for t in tickets)
+    assert rt.stats().batch_hist == {8: 1}
+
+
+def test_overfull_group_drains_in_cap_sized_batches(cell):
+    _, wl, eng = cell
+    clock = ManualClock()
+    rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=0.01),
+                        clock=clock)
+    [rt.submit(r) for r in reqs(wl, 2, 5)]   # 10 queries > cap 8
+    assert rt.step(now=0.0) == 4             # one full batch of 8
+    assert rt.stats().queued_queries == 2    # the tail request waits
+    clock.t = 0.01
+    assert rt.step(now=0.01) == 1            # ...until its deadline
+    assert rt.stats().batch_hist == {8: 1, 2: 1}
+
+
+def test_results_match_direct_engine_call(cell):
+    _, wl, eng = cell
+    clock = ManualClock()
+    rt = ServingRuntime(eng, clock=clock)
+    tickets = [rt.submit(r) for r in reqs(wl, 2, 8)]
+    rt.pump()
+    ids = np.concatenate([np.asarray(t.result().ids) for t in tickets])
+    d = np.concatenate([np.asarray(t.result().dists) for t in tickets])
+    want = eng.search_batch(SearchRequest(
+        xq=wl.xq[:16], predicates=list(wl.predicates[:16]), k=K, ef=EF))
+    np.testing.assert_array_equal(ids, np.asarray(want.ids))
+    np.testing.assert_array_equal(d, np.asarray(want.dists))
+    assert not any(bool(np.asarray(t.result().shed).any()) for t in tickets)
+
+
+def test_mixed_program_shapes_group_separately(cell):
+    """Different predicate arities must not coalesce into one batch (that
+    would retrace); each shape signature dispatches on its own."""
+    _, wl, eng = cell
+    rt = ServingRuntime(eng, clock=ManualClock())
+    t_a = rt.submit(SearchRequest(xq=wl.xq[:2],
+                                  predicates=list(wl.predicates[:2]), k=K))
+    # deep enough that the *bucketed* program shape differs from a lone
+    # Equals (shape sigs bucket up, so a shallow And can still collide)
+    deep = [And(tuple(Between("label", v, v + 1) for v in range(4))
+                + (Equals("label", 0),))] * 2
+    t_b = rt.submit(SearchRequest(xq=wl.xq[2:4], predicates=deep, k=K))
+    assert len(rt._groups) == 2   # distinct admission keys
+    rt.pump()
+    assert rt.stats().dispatches == 2
+    assert sorted(rt.dispatch_log) == [(0,), (1,)]
+    # each result matches its own direct-engine answer
+    want_b = eng.search_batch(SearchRequest(xq=wl.xq[2:4], predicates=deep,
+                                            k=K, ef=EF))
+    np.testing.assert_array_equal(np.asarray(t_b.result().ids),
+                                  np.asarray(want_b.ids))
+    assert t_a.result().ids.shape == (2, K)
+
+
+# ---------------------------------------------------------------------------
+# deterministic coalescing under equal arrival timestamps
+# ---------------------------------------------------------------------------
+
+
+def test_equal_arrival_timestamps_replay_identically(cell):
+    """A coarse clock gives every submit the same arrival time; the
+    monotonic seq must tie-break so a replayed trace coalesces into the
+    same batches with bit-identical results (the PR's pinned bugfix)."""
+    _, wl, eng = cell
+
+    def run_once():
+        rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=0.01),
+                            clock=ManualClock(0.0))  # frozen clock: all ties
+        tickets = [rt.submit(r) for r in reqs(wl, 2, 7)]
+        rt.pump()
+        ids = np.concatenate([np.asarray(t.result().ids) for t in tickets])
+        return list(rt.dispatch_log), ids
+
+    log1, ids1 = run_once()
+    log2, ids2 = run_once()
+    assert log1 == log2
+    assert log1[0] == (0, 1, 2, 3)   # FIFO by seq, drained to the cap
+    np.testing.assert_array_equal(ids1, ids2)
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_overload_sheds_sentinel_and_never_raises(cell):
+    _, wl, eng = cell
+    rt = ServingRuntime(eng, RuntimeConfig(max_queue=4,
+                                           coalesce_deadline=10.0),
+                        clock=ManualClock())
+    kept = [rt.submit(r) for r in reqs(wl, 2, 2)]    # fills the queue
+    shed = rt.submit(reqs(wl, 2, 1, start=4)[0])     # over: shed in-band
+    assert shed.done()                               # resolved immediately
+    res = shed.result()
+    assert bool(np.asarray(res.shed).all())
+    assert (np.asarray(res.ids) == -1).all()
+    assert np.isinf(np.asarray(res.dists)).all()
+    st = rt.stats()
+    assert st.shed == 2 and st.queued_queries == 4
+    rt.pump()                                        # the admitted ones serve
+    assert all((np.asarray(t.result().ids)[:, 0] >= 0).all() for t in kept)
+
+
+def test_stop_without_drain_sheds_leftovers(cell):
+    _, wl, eng = cell
+    rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=30.0)).start()
+    tickets = [rt.submit(r) for r in reqs(wl, 2, 2)]
+    rt.stop(drain=False)
+    for t in tickets:
+        assert bool(np.asarray(t.result(timeout=5).shed).all())
+    assert rt.stats().shed == 4
+
+
+def test_stop_with_drain_serves_far_deadline_queue(cell):
+    """stop(drain=True) must serve what's queued even when no coalesce
+    deadline would come due soon — not hang waiting for one."""
+    _, wl, eng = cell
+    rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=30.0)).start()
+    tickets = [rt.submit(r) for r in reqs(wl, 2, 2)]
+    rt.stop(drain=True)
+    for t in tickets:
+        assert not bool(np.asarray(t.result(timeout=5).shed).any())
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware ef / route selection
+# ---------------------------------------------------------------------------
+
+
+def test_slo_picks_largest_ef_that_fits_budget(cell):
+    _, wl, eng = cell
+    cfg = RuntimeConfig(coalesce_deadline=0.01, slo_budget=0.05,
+                        ef_ladder=(8, EF))
+    rt = ServingRuntime(eng, cfg, clock=ManualClock())
+    # live model: ef=16 is known to blow the 0.04 s post-coalesce budget,
+    # ef=8 fits comfortably
+    rt._ewma_er[(EF, None)] = 10.0
+    rt._ewma_er[(8, None)] = 1e-4
+    rt.submit(reqs(wl, 2, 1)[0])
+    (key,) = rt._groups
+    assert key[-2] == 8          # downgraded ef
+    assert key[-1] is None       # route untouched: graph/§5.2 as usual
+    rt.pump()
+
+
+def test_slo_unknown_latency_is_optimistic(cell):
+    _, wl, eng = cell
+    cfg = RuntimeConfig(slo_budget=0.05, ef_ladder=(8, EF))
+    rt = ServingRuntime(eng, cfg, clock=ManualClock())
+    rt.submit(reqs(wl, 2, 1)[0])  # no observations yet
+    (key,) = rt._groups
+    assert key[-2] == EF         # best quality until the model says no
+    rt.pump()
+
+
+def test_slo_hopeless_budget_routes_selective_to_prefilter(cell):
+    """When even the ladder floor is predicted to blow the budget and the
+    sketches say the predicate is selective (< s_min), the request takes
+    the exact pre-filter route instead of a doomed graph walk."""
+    _, wl, eng = cell
+    cfg = RuntimeConfig(coalesce_deadline=0.01, slo_budget=0.05,
+                        ef_ladder=(8, EF))
+    rt = ServingRuntime(eng, cfg, clock=ManualClock())
+    rt._ewma_er[(EF, None)] = 10.0
+    rt._ewma_er[(8, None)] = 10.0
+    # contradiction => selectivity 0 < s_min = 1/gamma
+    selective = [And((Equals("label", 0), Equals("label", 1)))] * 2
+    t = rt.submit(SearchRequest(xq=wl.xq[:2], predicates=selective, k=K))
+    (key,) = rt._groups
+    assert key[-2] == 8 and key[-1] == "prefilter"
+    rt.pump()
+    assert (np.asarray(t.result().routes) == "prefilter").all()
+
+
+# ---------------------------------------------------------------------------
+# trace accounting + metrics
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_steady_state_mints_no_new_traces(cell):
+    ds, wl, _ = cell
+    # gamma=8 -> s_min=0.125 < the equals-workload selectivity (~0.25),
+    # so every query stays on the graph route and exercises the cache
+    acorn = AcornConfig(M=8, gamma=8, m_beta=16, ef_search=EF,
+                        buckets=BUCKETS)
+    eng = ServingEngine(ds.x, ds.table, acorn,
+                        EngineConfig(batch_size=8, k=K, ef=EF, n_shards=1))
+    rt = ServingRuntime(eng, clock=ManualClock())
+    for _ in range(3):                       # identical rounds
+        [rt.submit(r) for r in reqs(wl, 2, 4)]
+        rt.pump()
+    traces = eng.shards[0].index.cache.bucket_traces()
+    assert traces and all(v == 1 for v in traces.values()), traces
+
+
+def test_stats_snapshot(cell):
+    _, wl, eng = cell
+    clock = ManualClock()
+    rt = ServingRuntime(eng, RuntimeConfig(max_queue=8,
+                                           coalesce_deadline=0.01),
+                        clock=clock)
+    [rt.submit(r) for r in reqs(wl, 2, 4)]
+    shed = rt.submit(reqs(wl, 2, 1, start=8)[0])
+    assert shed.done()
+    clock.t = 0.02
+    rt.step(now=0.02)
+    st = rt.stats()
+    assert st.submitted == 5 and st.completed == 8 and st.shed == 2
+    assert st.dispatches == 1 and st.queue_depth == 0
+    assert st.qps > 0 and st.latency_p50 > 0
+    assert st.latency_p99 >= st.latency_p50
+    assert sum(k * v for k, v in st.batch_hist.items()) == 8
+    assert set(st.per_bucket) == {8}
+    assert st.per_bucket[8]["count"] == 8
+    ((bucket, ef, route),) = st.latency_model
+    assert bucket == 8 and ef == EF and route is None
+
+
+def test_threaded_worker_serves_open_loop(cell):
+    _, wl, eng = cell
+    cfg = RuntimeConfig(coalesce_deadline=0.005)
+    with ServingRuntime(eng, cfg) as rt:
+        tickets = [rt.submit(r) for r in reqs(wl, 2, 6)]
+        ids = np.concatenate([np.asarray(t.result(timeout=60).ids)
+                              for t in tickets])
+    want = eng.search_batch(SearchRequest(
+        xq=wl.xq[:12], predicates=list(wl.predicates[:12]), k=K, ef=EF))
+    np.testing.assert_array_equal(ids, np.asarray(want.ids))
+    assert rt.stats().completed == 12
+
+
+# ---------------------------------------------------------------------------
+# subprocess: SPMD vs host parity *under the runtime* (8 devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+assert jax.local_device_count() == 8
+
+from repro.core import AcornConfig, ExecutionSpec, SearchRequest
+from repro.data import make_lcps_dataset, make_workload
+from repro.serve import (EngineConfig, RuntimeConfig, ServingEngine,
+                         ServingRuntime)
+
+ds = make_lcps_dataset(n=800, d=12, card=6, seed=0)
+wl = make_workload(ds, kind="equals", n_queries=24, k=10, seed=1, card=6)
+acorn = AcornConfig(M=8, gamma=6, m_beta=16, ef_search=32, buckets=(16,))
+mesh = ExecutionSpec(data_parallel=2, corpus_parallel=2)
+eng_spmd = ServingEngine(ds.x, ds.table, acorn,
+                         EngineConfig(batch_size=16, k=10, ef=32, n_shards=2,
+                                      spec=mesh))
+eng_host = ServingEngine(ds.x, ds.table, acorn,
+                         EngineConfig(batch_size=16, k=10, ef=32, n_shards=2,
+                                      spec=mesh, host_fallback=True))
+assert eng_spmd.spmd_mesh_shape() == (2, 2)
+assert eng_host.spmd_mesh_shape() is None
+
+def run(eng):
+    rt = ServingRuntime(eng, RuntimeConfig(coalesce_deadline=0.01))
+    tickets = []
+    for s in range(0, 24, 3):
+        tickets.append(rt.submit(SearchRequest(
+            xq=wl.xq[s:s + 3], predicates=list(wl.predicates[s:s + 3]),
+            k=10)))
+    rt.pump()
+    ids = np.concatenate([np.asarray(t.result().ids) for t in tickets])
+    d = np.concatenate([np.asarray(t.result().dists) for t in tickets])
+    return ids, d, rt
+
+ids_s, d_s, rt_s = run(eng_spmd)
+ids_h, d_h, rt_h = run(eng_host)
+np.testing.assert_array_equal(ids_s, ids_h)
+np.testing.assert_array_equal(d_s, d_h)
+assert rt_s.dispatch_log == rt_h.dispatch_log
+# coalesced dispatches ran the mesh in its one-trace steady state
+assert eng_spmd.spmd_traces() == {16: 1}, eng_spmd.spmd_traces()
+print("RUNTIME_SPMD_OK")
+"""
+
+
+def test_runtime_spmd_host_parity_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "RUNTIME_SPMD_OK" in r.stdout
